@@ -1,0 +1,65 @@
+"""Fig 4a: superlinear batch-size scaling.
+
+ParDNN distributes parameters instead of replicating them (DP), so the
+max trainable batch grows superlinearly with device count. We calibrate
+the device memory cap so the single-device max batch matches a small
+base (like the paper's single-GPU reference), then grow K and report
+  max_batch(K) / (K · max_batch(1))      — the "increase over ideal DP"
+column of Fig 4a (paper: up to 16×, avg >9× at 16 GPUs).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import pardnn_partition
+from repro.core.modelgraphs import trn, word_rnn
+
+from .common import emit, timer
+
+
+def _peak_single(gen, batch) -> float:
+    g = gen(batch)
+    p = pardnn_partition(g, 1)
+    return float(np.max(p.peak_mem))
+
+
+def max_batch(gen, k: int, cap: float, candidates) -> int:
+    best = 0
+    for b in candidates:
+        g = gen(b)
+        p = pardnn_partition(g, k, mem_caps=cap / 0.9)
+        if p.feasible:
+            best = b
+        else:
+            break
+    return best
+
+
+def run(full: bool = False, ks=(1, 2, 4)) -> dict:
+    if full:
+        ks = (1, 2, 4, 8, 16)
+    models = {
+        "word-rnn": lambda b: word_rnn(layers=3, seq=8, batch=b),
+        "trn": lambda b: trn(layers=4, seq=16, heads=4, batch=b),
+    }
+    candidates = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+    out = {}
+    for name, gen in models.items():
+        base_b = 2
+        cap = _peak_single(gen, base_b) * 1.02   # single-dev max == base_b
+        b1 = max_batch(gen, 1, cap, candidates)
+        row = {1: b1}
+        for k in ks[1:]:
+            with timer() as t:
+                bk = max_batch(gen, k, cap, candidates)
+            row[k] = bk
+            ideal_dp = k * b1
+            mult = bk / max(ideal_dp, 1)
+            emit(f"fig4a/{name}/k{k}/max_batch", t["us"],
+                 f"{bk} ({mult:.1f}x over ideal DP)")
+        out[name] = row
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks (CPU host: relative numbers only).
+
+Times the XLA chunked-attention path (the kernel's twin, what the
+dry-run deploys off-TPU) against the O(S²) plain path, and the RWKV6
+chunked-GEMM form against the step-wise oracle — the algorithmic wins
+the Pallas kernels encode. Pallas interpret mode is a correctness tool,
+not a performance mode, so it is excluded from timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _chunked_gqa, _plain_gqa
+from repro.models.rwkv import _wkv_chunked
+from repro.kernels.rwkv6.ref import rwkv6_ref
+
+from .common import emit
+
+
+def _time(f, *args, iters=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(full: bool = False) -> dict:
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 1, 2048, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    chunked = jax.jit(lambda q, k, v: _chunked_gqa(
+        q, k, v, causal=True, window=None, q_offset=0, chunk=256))
+    plain = jax.jit(lambda q, k, v: _plain_gqa(
+        q, k, v, causal=True, window=None, q_offset=0))
+    us_c = _time(chunked, q, k, v)
+    us_p = _time(plain, q, k, v)
+    emit("kernels/attn_chunked_vs_plain", us_c,
+         f"plain={us_p:.0f}us ratio={us_p / us_c:.2f}")
+
+    B, S, H, hd = 1, 512, 2, 64
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd))
+    kk = jax.random.normal(ks[1], (B, S, H, hd)) * 0.3
+    vv = jax.random.normal(ks[2], (B, S, H, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) * 0.3 - 2))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    chunk_fn = jax.jit(lambda *a: _wkv_chunked(*a, chunk=64)[0])
+    step_fn = jax.jit(lambda r, k, v, w, u: rwkv6_ref(
+        r.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), w.transpose(0, 2, 1, 3), u)[0])
+    us_chunk = _time(chunk_fn, r, kk, vv, w, u)
+    us_step = _time(step_fn, r, kk, vv, w, u)
+    emit("kernels/rwkv_chunked_vs_stepwise", us_chunk,
+         f"stepwise={us_step:.0f}us speedup={us_step / us_chunk:.2f}x")
+    return {"attn": {"chunked_us": us_c, "plain_us": us_p},
+            "rwkv": {"chunked_us": us_chunk, "step_us": us_step}}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig 4b/c: GPU-count scaling of training throughput.
+
+Throughput(K) = batch(K) / makespan(K) with batch(K) the Fig-4a max
+batch; speedup vs a single device. The weight-read-amortization term in
+the cost model (modelgraphs) is what makes the per-sample time drop with
+batch — the paper's superlinear region up to 4 GPUs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import pardnn_partition
+from repro.core.modelgraphs import char_crn, trn, word_rnn
+
+from .common import emit, timer
+
+
+def run(full: bool = False, ks=(1, 2, 4, 8)) -> dict:
+    models = {
+        "word-rnn": lambda b: word_rnn(layers=3, seq=8, batch=b),
+        "char-crn": lambda b: char_crn(layers=3, seq=6, batch=b),
+        "trn": lambda b: trn(layers=4, seq=16, heads=4, batch=b),
+    }
+    out = {}
+    for name, gen in models.items():
+        # single-device reference at small batch (under-utilized device)
+        b1 = 2
+        g1 = gen(b1)
+        p1 = pardnn_partition(g1, 1)
+        thr1 = b1 / p1.makespan
+        out[name] = {}
+        for k in ks:
+            bk = b1 * k * 4          # ParDNN enables larger-than-DP batch
+            g = gen(bk)
+            with timer() as t:
+                p = pardnn_partition(g, k)
+            thr = bk / p.makespan
+            sp = thr / thr1
+            emit(f"fig4b/{name}/k{k}/speedup", t["us"],
+                 f"{sp:.2f}x (batch {bk})")
+            out[name][k] = sp
+    return out
+
+
+if __name__ == "__main__":
+    run()

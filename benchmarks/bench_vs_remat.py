@@ -1,0 +1,97 @@
+"""Fig 3b: ParDNN vs gradient checkpointing (+ data parallelism).
+
+Gradient-checkpointing model (Chen et al. 2016, √L segments):
+  memory:  weights + activations·(2/√L)   (per replica, batch/K each)
+  compute: +1 forward recompute per step  (≈ +fwd_fraction of the step)
+ParDNN: partitioned graph, memory distributed, emulated makespan.
+
+Reproduced claims: (i) ParDNN outperforms GC+DP in most configs (paper:
+up to 2.8×); (ii) configs exist where GC OOMs even at batch 1 while
+ParDNN trains them (weights alone exceed one device)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import pardnn_partition
+from repro.core.graph import RESIDUAL
+from repro.core.modelgraphs import trn, wrn
+
+from .common import emit, timer
+
+
+def _weights_bytes(g) -> float:
+    nt = np.asarray(g.ntype)
+    return float(np.sum(np.asarray(g.mem)[nt == RESIDUAL]))
+
+
+def _act_bytes(g) -> float:
+    nt = np.asarray(g.ntype)
+    return float(np.sum(np.asarray(g.mem)[nt != RESIDUAL])) / 2  # fwd half
+
+
+def gc_dp_throughput(gen, layers: int, batch: int, k: int, cap: float):
+    """Throughput of GC+DP, or None if OOM at per-replica batch>=1."""
+    from repro.core.costmodel import V100
+    per = max(batch // k, 1)
+    g = gen(per)
+    serial = pardnn_partition(g, 1)
+    w = _weights_bytes(g)
+    act = _act_bytes(g) * 2.0 / np.sqrt(max(layers, 1))
+    if w + act > cap:
+        return None
+    fwd_frac = 1.0 / 3.0
+    step = serial.makespan * (1.0 + fwd_frac)   # recompute overhead
+    if k > 1:  # DP gradient all-reduce (ring) each step
+        step += V100.comm_seconds(2.0 * w * (k - 1) / k)
+    return per * k / step
+
+
+def run(full: bool = False, ks=(4, 8)) -> dict:
+    cases = {
+        "trn": (lambda b: trn(layers=4, seq=16, heads=4, batch=b), 4),
+        "wrn": (lambda b: wrn(residual_units=12, widen=4, batch=b), 12),
+    }
+    out = {}
+    for name, (gen, layers) in cases.items():
+        # cap: one replica fits a small batch with GC but not without —
+        # the Fig-3b regime where both methods are feasible
+        g_small = gen(4)
+        w = _weights_bytes(g_small)
+        cap = w + _act_bytes(g_small) * 2.5 / np.sqrt(max(layers, 1))
+        for k in ks:
+            # the paper compares at the common largest feasible batch
+            best = None
+            with timer() as t:
+                for batch in (k, 2 * k, 4 * k, 8 * k):
+                    p = pardnn_partition(gen(batch), k, mem_caps=cap / 0.9)
+                    gc = gc_dp_throughput(gen, layers, batch, k, cap)
+                    if p.feasible and gc is not None:
+                        best = (batch, batch / p.makespan, gc)
+            if best is None:
+                gc1 = gc_dp_throughput(gen, layers, k, k, cap)
+                emit(f"fig3b/{name}/k{k}", t["us"],
+                     "GC OOM; ParDNN trains (qualitative win)"
+                     if gc1 is None else "no common feasible batch")
+                out[(name, k)] = {"gc": None}
+            else:
+                batch, thr_p, thr_gc = best
+                sp = thr_p / thr_gc
+                emit(f"fig3b/{name}/k{k}/speedup_vs_gc", t["us"],
+                     f"{sp:.2f}x (batch {batch})")
+                out[(name, k)] = {"speedup": sp}
+    # the qualitative case: model whose WEIGHTS exceed one device
+    g_big = trn(layers=8, seq=16, heads=4, batch=1)
+    w = _weights_bytes(g_big)
+    cap_small = w * 0.6
+    p = pardnn_partition(g_big, 4, mem_caps=cap_small / 0.9)
+    gc = gc_dp_throughput(lambda b: trn(layers=8, seq=16, heads=4, batch=b),
+                          8, 1, 1, cap_small)
+    emit("fig3b/weights_exceed_device", 0.0,
+         f"GC={'OOM' if gc is None else 'fits'}, "
+         f"ParDNN_feasible={p.feasible} (paper: ParDNN trains these)")
+    out["qualitative"] = {"gc_oom": gc is None, "pardnn": p.feasible}
+    return out
+
+
+if __name__ == "__main__":
+    run()

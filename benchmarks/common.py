@@ -1,0 +1,47 @@
+"""Shared helpers for the benchmark suite.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (the repo
+contract) — ``us_per_call`` is partitioner/emulator wall time where that
+is the measured quantity, and ``derived`` carries the paper-comparable
+ratio (speedup, makespan ratio, batch multiple, ...).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.core.modelgraphs import PAPER_MODELS
+
+# Scaled-down versions of Table 3 for CI speed (structure preserved,
+# node counts in the low thousands). --full uses the real configs.
+SMALL_MODELS = {
+    "word-rnn": lambda: PAPER_MODELS["word-rnn"](layers=4, seq=12, batch=16)
+    if False else None,
+}
+
+
+def small_paper_models(full: bool = False) -> dict:
+    from repro.core import modelgraphs as mg
+    if full:
+        return {k: (lambda gen=v: gen(batch=4)) for k, v in
+                mg.PAPER_MODELS.items() if not k.endswith("-2")}
+    return {
+        "word-rnn": lambda: mg.word_rnn(layers=4, seq=12, batch=16),
+        "char-crn": lambda: mg.char_crn(layers=4, seq=8, batch=8),
+        "wrn": lambda: mg.wrn(residual_units=24, widen=4, batch=4),
+        "trn": lambda: mg.trn(layers=6, seq=32, heads=8, batch=2),
+        "e3d": lambda: mg.e3d(hidden=64, layers=3, seq=6, batch=1),
+    }
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@contextmanager
+def timer():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+    box["us"] = box["s"] * 1e6

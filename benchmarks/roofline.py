@@ -1,0 +1,132 @@
+"""§Roofline: render the per-(arch × shape × mesh) roofline table from
+the dry-run artifacts (results/dryrun/*.json).
+
+Per cell: the three terms (compute / memory / collective, seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), HBM
+fit, and the roofline fraction = compute_term / bound (how close the
+cell is to being compute-limited — the score §Perf pushes up)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+HBM_PER_CHIP = 16 * 2 ** 30
+HBM_BW = 819e9
+
+
+def attention_score_traffic(arch: str, shape_name: str) -> float:
+    """HBM bytes the CPU-backend HLO spends materializing f32 attention
+    scores — traffic the Pallas flash kernel (kernels/flash_attention,
+    validated vs ref) keeps in VMEM on the TPU target. Used to derive the
+    kernel-adjusted memory term (§Perf iteration M3: on mixtral train_4k
+    scores account for ~90% of the raw memory term)."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    kinds = list(cfg.prelude) + list(cfg.block_pattern) * cfg.num_periods
+    total = 0.0
+    for kind in kinds:
+        if not kind.startswith(("attn", "swa", "mla")):
+            continue
+        H = cfg.num_heads
+        if shape.kind == "decode":
+            elems = B * H * 1 * S
+            accesses = 2.0
+        else:
+            skv = min(cfg.sliding_window, S) if kind.startswith("swa") \
+                else S / 2
+            elems = B * H * S * skv
+            accesses = 4.0 if shape.kind == "train" else 2.0
+        total += elems * 4.0 * accesses          # f32 scores
+    return total
+
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load_cells(results_dir: str = RESULTS_DIR, tag: str = "") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if (d.get("tag") or "") != tag:
+            continue  # per-iteration tagged artifacts stay out of the table
+        cells.append(d)
+    cells.sort(key=lambda d: (d["arch"], SHAPE_ORDER.get(d["shape"], 9),
+                              d["mesh"]))
+    return cells
+
+
+def adjusted_terms(d: dict) -> dict | None:
+    """Roofline terms with the memory term corrected for flash-kernel
+    score traffic (never below params+activation floor of 10% raw)."""
+    r = d.get("roofline")
+    if not r:
+        return None
+    corr = attention_score_traffic(d["arch"], d["shape"])
+    chips = d.get("chips", 256)
+    mem_adj = max(r["memory_s"] - corr / (chips * HBM_BW),
+                  0.05 * r["memory_s"])
+    dom = max((r["compute_s"], "compute"), (mem_adj, "memory"),
+              (r["collective_s"], "collective"))
+    return {"compute_s": r["compute_s"], "memory_s": mem_adj,
+            "collective_s": r["collective_s"], "dominant": dom[1],
+            "bound_s": dom[0]}
+
+
+def fraction(d: dict, adjusted: bool = True) -> float | None:
+    r = adjusted_terms(d) if adjusted else d.get("roofline")
+    if not r or not r.get("bound_s"):
+        return None
+    return r["compute_s"] / r["bound_s"]
+
+
+def row(d: dict) -> str:
+    cell = f"{d['arch']} × {d['shape']} × {d['mesh']}"
+    if d["status"] == "SKIP":
+        return f"| {cell} | SKIP | — | — | — | — | — | {d['reason']} |"
+    if d["status"] == "FAIL":
+        return f"| {cell} | FAIL | — | — | — | — | — | {d['error'][:60]} |"
+    r = d.get("roofline")
+    mem_gb = (d.get("per_device_total_bytes") or 0) / 2 ** 30
+    fit = "✓" if mem_gb <= 14.4 else f"✗ ({mem_gb:.1f}G)"
+    if not r:
+        return (f"| {cell} | OK | — | — | — | — | {fit} | compile-only |")
+    a = adjusted_terms(d)
+    fr = fraction(d)
+    ratio = d.get("useful_flops_ratio")
+    return (f"| {cell} | OK | {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+            f"(adj {a['memory_s']:.3g}) | "
+            f"{r['collective_s']:.3g} | **{a['dominant']}** "
+            f"(frac {fr:.2f}) | {fit} | useful {ratio:.2f} |")
+
+
+def table(cells: list[dict]) -> str:
+    hdr = ("| cell | status | compute s | memory s | collective s | "
+           "dominant (roofline frac) | fits 16G | notes |\n"
+           "|---|---|---|---|---|---|---|---|")
+    return "\n".join([hdr] + [row(d) for d in cells])
+
+
+def run(full: bool = False) -> dict:
+    cells = load_cells()
+    ok = [c for c in cells if c["status"] == "OK"]
+    fails = [c for c in cells if c["status"] == "FAIL"]
+    skips = [c for c in cells if c["status"] == "SKIP"]
+    print(f"roofline/cells,{len(cells)},ok={len(ok)} fail={len(fails)} "
+          f"skip={len(skips)}")
+    fracs = [(fraction(c), c) for c in ok if fraction(c) is not None]
+    for fr, c in sorted(fracs, key=lambda x: x[0])[:5]:
+        print(f"roofline/worst/{c['arch']}__{c['shape']}__{c['mesh']},0,"
+              f"frac={fr:.3f} dom={c['roofline']['dominant']}")
+    return {"cells": len(cells), "ok": len(ok), "fail": len(fails),
+            "skip": len(skips)}
+
+
+if __name__ == "__main__":
+    print(table(load_cells()))

@@ -1,0 +1,70 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--full`` uses
+paper-scale graph sizes (minutes instead of seconds).
+
+  fig5a  bench_vs_rr          ParDNN vs Round-Robin / no-refinement
+  fig5b  bench_vs_lc          ParDNN vs Linear Clustering (quality + time)
+  §5.4.1 bench_overhead       partition time vs graph size, moved-node %
+  fig4a  bench_batch_scaling  superlinear max-batch scaling
+  fig4b  bench_throughput     GPU-count throughput scaling
+  fig3b  bench_vs_remat       vs gradient checkpointing + DP
+  fig3a  bench_vs_tp          vs Mesh-TF-style tensor parallelism
+  —      bench_memfidelity    Step-2 memory model vs XLA analysis
+  —      bench_pipeline_plan  ParDNN-PP stage plan vs uniform (beyond-paper)
+  —      bench_kernels        attention/rwkv algorithmic-form microbench
+  —      roofline             §Roofline summary from dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale graph sizes")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+
+    from . import (bench_batch_scaling, bench_kernels, bench_memfidelity,
+                   bench_overhead, bench_pipeline_plan, bench_throughput,
+                   bench_vs_lc, bench_vs_remat, bench_vs_rr, bench_vs_tp,
+                   roofline)
+    suites = [
+        ("fig5a_vs_rr", bench_vs_rr),
+        ("fig5b_vs_lc", bench_vs_lc),
+        ("overhead", bench_overhead),
+        ("fig4a_batch_scaling", bench_batch_scaling),
+        ("fig4b_throughput", bench_throughput),
+        ("fig3b_vs_remat", bench_vs_remat),
+        ("fig3a_vs_tp", bench_vs_tp),
+        ("memfidelity", bench_memfidelity),
+        ("pipeline_plan", bench_pipeline_plan),
+        ("kernels", bench_kernels),
+        ("roofline", roofline),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in suites:
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod.run(full=args.full)
+            print(f"{name}/TOTAL,{(time.perf_counter() - t0) * 1e6:.0f},ok")
+        except Exception:
+            failures += 1
+            print(f"{name}/TOTAL,0,FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

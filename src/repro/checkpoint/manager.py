@@ -1,0 +1,188 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout (one directory per step):
+
+    <dir>/step_00001000.tmp/...   — written first
+    <dir>/step_00001000/          — atomic os.rename on completion
+        index.json                — tree structure, shapes, dtypes, mesh
+        arr_<n>.npy               — one file per leaf (host-gathered)
+
+Fault-tolerance properties:
+  * atomic rename → a crash mid-save never corrupts the latest checkpoint;
+  * ``save_async`` device-gets on the caller thread (cheap) and writes on
+    a background thread so the train loop is not blocked by disk I/O;
+  * ``restore`` is *elastic*: arrays are re-placed under the current mesh
+    sharding, which may have a different device count / topology than the
+    mesh that saved them (node failure → restart on fewer pods);
+  * ``keep_last`` garbage-collects old steps, never the newest.
+
+On a real multi-host pod each host writes only the shards it owns
+(process-local addressable_shards) and index.json records the global
+layout; in this single-process container that degenerates to full arrays,
+same file format.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+
+
+_NATIVE_DTYPES = {"float64", "float32", "float16", "int64", "int32",
+                  "int16", "int8", "uint64", "uint32", "uint16", "uint8",
+                  "bool", "complex64", "complex128"}
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+@dataclass
+class CheckpointManager:
+    directory: str
+    keep_last: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._save_error: list = []
+
+    # ----------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def latest_step(self) -> int | None:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return max(steps) if steps else None
+
+    def all_steps(self) -> list[int]:
+        return sorted(s for s in (self.latest_step(),) if s is not None) \
+            if False else sorted(
+                int(n.split("_")[1]) for n in os.listdir(self.directory)
+                if n.startswith("step_") and not n.endswith(".tmp"))
+
+    # ----------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> str:
+        """Blocking save."""
+        host_leaves, treedef = self._gather(tree)
+        return self._write(step, host_leaves, treedef, extra or {})
+
+    def save_async(self, step: int, tree: Any,
+                   extra: dict | None = None) -> None:
+        """Device-get now, write on a background thread."""
+        self.wait()
+        host_leaves, treedef = self._gather(tree)
+
+        def work():
+            try:
+                self._write(step, host_leaves, treedef, extra or {})
+            except Exception as e:  # surfaced by wait()
+                self._save_error.append(e)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._save_error:
+            raise self._save_error.pop()
+
+    # ----------------------------------------------------------------
+    def _gather(self, tree: Any):
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        return host, treedef
+
+    def _write(self, step: int, host_leaves, treedef, extra: dict) -> str:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        index = {
+            "step": step,
+            "treedef": jax.tree_util.tree_structure(
+                jax.tree_util.tree_unflatten(
+                    treedef, list(range(len(host_leaves))))).__repr__(),
+            "num_leaves": len(host_leaves),
+            "leaves": [{"file": f"arr_{i}.npy", "shape": list(a.shape),
+                        "dtype": str(a.dtype),
+                        "raw": a.dtype.name not in _NATIVE_DTYPES}
+                       for i, a in enumerate(host_leaves)],
+            "extra": extra,
+            "time": time.time(),
+            "num_devices_at_save": jax.device_count(),
+        }
+        for i, a in enumerate(host_leaves):
+            if a.dtype.name not in _NATIVE_DTYPES:
+                # npy cannot round-trip ml_dtypes (bf16, fp8): store bytes
+                a = a.view(np.uint8).reshape(a.shape + (a.dtype.itemsize,))
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), a)
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last] if self.keep_last else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # clean stale tmp dirs (crashed saves)
+        for name in os.listdir(self.directory):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
+
+    # ----------------------------------------------------------------
+    def restore(self, target_tree: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Elastic restore: loads host arrays and re-places them under
+        ``shardings`` (or the target tree's shardings / default device).
+        Returns (tree, extra)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "index.json")) as f:
+            index = json.load(f)
+        leaves, treedef = _flatten(target_tree)
+        if len(leaves) != index["num_leaves"]:
+            raise ValueError(
+                f"checkpoint has {index['num_leaves']} leaves, target tree "
+                f"has {len(leaves)} — incompatible model/optimizer config")
+        shard_leaves = (_flatten(shardings)[0] if shardings is not None
+                        else [None] * len(leaves))
+        out = []
+        for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+            a = np.load(os.path.join(d, f"arr_{i}.npy"))
+            meta = index["leaves"][i]
+            if meta.get("raw"):
+                dt = np.dtype(meta["dtype"])
+                a = a.reshape(-1).view(dt).reshape(meta["shape"])
+            if list(a.shape) != list(ref.shape):
+                raise ValueError(
+                    f"leaf {i}: checkpoint shape {meta['shape']} != "
+                    f"target {list(ref.shape)}")
+            a = a.astype(ref.dtype)
+            out.append(jax.device_put(a, sh) if sh is not None
+                       else jax.device_put(a))
+        return jax.tree_util.tree_unflatten(treedef, out), index["extra"]

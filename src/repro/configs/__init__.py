@@ -1,0 +1,19 @@
+"""Architecture registry — one module per assigned architecture."""
+from .base import (ModelConfig, MoEConfig, MambaConfig, RWKVConfig,
+                   ShapeConfig, SHAPES, REGISTRY, get_config, reduced,
+                   register, shape_skip_reason)
+
+# registration side-effects
+from . import (mixtral_8x7b, deepseek_v2_lite_16b, gemma3_1b, starcoder2_7b,
+               granite_8b, qwen2_5_14b, rwkv6_7b, internvl2_1b,
+               jamba_v0_1_52b, hubert_xlarge, repro_lm_100m)
+
+ASSIGNED_ARCHS = [
+    "mixtral-8x7b", "deepseek-v2-lite-16b", "gemma3-1b", "starcoder2-7b",
+    "granite-8b", "qwen2.5-14b", "rwkv6-7b", "internvl2-1b",
+    "jamba-v0.1-52b", "hubert-xlarge",
+]
+
+__all__ = ["ModelConfig", "MoEConfig", "MambaConfig", "RWKVConfig",
+           "ShapeConfig", "SHAPES", "REGISTRY", "get_config", "reduced",
+           "register", "shape_skip_reason", "ASSIGNED_ARCHS"]

@@ -1,0 +1,17 @@
+"""ParDNN core: the paper's computational-graph partitioning algorithm."""
+from .costmodel import DeviceModel, TPU_V5E, V100
+from .emulator import Schedule, emulate
+from .graph import CostGraph, Placement, random_dag, NORMAL, RESIDUAL, REF
+from .memops import MemoryProfile, compute_profile, memory_potentials
+from .partitioner import PardnnOptions, pardnn_partition
+from .slicing import Slicing, slice_graph
+from .mapping import Mapping, map_clusters, glb_map
+
+__all__ = [
+    "CostGraph", "Placement", "random_dag", "NORMAL", "RESIDUAL", "REF",
+    "DeviceModel", "TPU_V5E", "V100",
+    "Schedule", "emulate",
+    "MemoryProfile", "compute_profile", "memory_potentials",
+    "PardnnOptions", "pardnn_partition",
+    "Slicing", "slice_graph", "Mapping", "map_clusters", "glb_map",
+]

@@ -1,0 +1,65 @@
+"""Device cost model.
+
+ParDNN consumes *annotated* graphs: per-node compute seconds, output bytes
+and per-edge communication seconds. The paper obtains these from TensorFlow
+profiling on V100s; this container has no accelerator, so the framework
+derives them analytically from a device model. The dry-run roofline
+(EXPERIMENTS.md) uses the same constants.
+
+TPU v5e (target hardware):
+  peak bf16      : 197 TFLOP/s per chip
+  HBM bandwidth  : 819 GB/s per chip
+  ICI link       : ~50 GB/s per link
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+TPU_V5E_PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+TPU_V5E_HBM_BW = 819e9            # bytes/s per chip
+TPU_V5E_ICI_BW = 50e9             # bytes/s per link
+TPU_V5E_HBM_BYTES = 16 * 2**30    # 16 GiB HBM per chip
+DCN_BW = 25e9                     # bytes/s per host, pod-to-pod (data-center net)
+
+# V100-SXM3-32GB — the paper's testbed (DGX-2); used by the paper-fidelity
+# benchmarks so reported numbers are comparable with the paper's setting.
+V100_PEAK_FLOPS = 125e12          # fp16 tensor-core FLOP/s
+V100_HBM_BW = 900e9
+V100_NVSWITCH_BW = 150e9          # per-GPU NVSwitch bandwidth (bidir 300)
+V100_HBM_BYTES = 32 * 2**30
+
+
+@dataclass(frozen=True)
+class DeviceModel:
+    name: str
+    peak_flops: float          # FLOP/s
+    hbm_bw: float              # bytes/s
+    link_bw: float             # bytes/s (interconnect, per device)
+    hbm_bytes: float           # memory capacity
+    link_latency: float = 1e-6 # seconds per message (alpha term)
+    flop_efficiency: float = 0.5   # sustained fraction of peak for dense ops
+    mem_fraction: float = 0.9      # paper §4: spare 10% for fragmentation etc.
+
+    def compute_seconds(self, flops: float, bytes_touched: float = 0.0) -> float:
+        """Roofline op time: max(compute, memory) term."""
+        t_c = flops / (self.peak_flops * self.flop_efficiency)
+        t_m = bytes_touched / self.hbm_bw
+        return max(t_c, t_m)
+
+    def comm_seconds(self, nbytes: float) -> float:
+        return self.link_latency + nbytes / self.link_bw
+
+    @property
+    def usable_hbm(self) -> float:
+        return self.hbm_bytes * self.mem_fraction
+
+
+TPU_V5E = DeviceModel("tpu-v5e", TPU_V5E_PEAK_FLOPS, TPU_V5E_HBM_BW,
+                      TPU_V5E_ICI_BW, TPU_V5E_HBM_BYTES)
+V100 = DeviceModel("v100-sxm3", V100_PEAK_FLOPS, V100_HBM_BW,
+                   V100_NVSWITCH_BW, V100_HBM_BYTES)
+
+
+def dtype_bytes(dtype) -> int:
+    import numpy as np
+    return np.dtype(dtype).itemsize

@@ -1,0 +1,98 @@
+"""Step-2 stage 1: scheduler emulator (§3.2.1).
+
+Emulates the TensorFlow executor: each device keeps a FIFO ready queue;
+a node becomes ready when all its ancestors have executed (its in-degree
+reaches zero); ready nodes run in FIFO order, one at a time per device.
+Cross-device edges delay readiness by ``comm(e)``.
+
+The emulator yields the expected start/finish time of every node under a
+given placement — the temporal model both the memory tracker (stage 2)
+and the makespan metric are built on. Any FIFO executor (not just TF's)
+fits this model; per DESIGN.md §2 it also models our pipeline runtime at
+the stage granularity.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+from .graph import CostGraph
+
+
+@dataclass
+class Schedule:
+    st: np.ndarray            # start times
+    ft: np.ndarray            # finish times
+    makespan: float
+    exec_order: np.ndarray    # nodes sorted by (st, id)
+    pe_busy: np.ndarray       # per-pe total busy time
+
+
+def emulate(g: CostGraph, assignment: np.ndarray, k: int,
+            comm_scale: float = 1.0) -> Schedule:
+    n = g.n
+    comp = np.asarray(g.comp)
+    st = np.zeros(n)
+    ft = np.zeros(n)
+    indeg = np.zeros(n, dtype=np.int64)
+    ready_at = np.zeros(n)
+    for u in range(n):
+        for v, _ in g.out_edges[u]:
+            indeg[v] += 1
+
+    # per-pe FIFO: heap keyed by (ready_time, seq) — nodes are enqueued the
+    # moment they become ready, so ready-time order IS insertion order.
+    queues: list[list[tuple[float, int, int]]] = [[] for _ in range(k)]
+    seq = 0
+    for u in range(n):
+        if indeg[u] == 0:
+            heapq.heappush(queues[assignment[u]], (0.0, seq, u))
+            seq += 1
+
+    pe_free = np.zeros(k)
+    pe_busy = np.zeros(k)
+    # global event loop: always advance the pe that can start its head task
+    # earliest. A simple k-way merge; O((V+E) log V) overall.
+    pending = n
+    heap: list[tuple[float, int]] = []  # (candidate start time, pe)
+    for pe in range(k):
+        if queues[pe]:
+            heap.append((max(pe_free[pe], queues[pe][0][0]), pe))
+    heapq.heapify(heap)
+
+    while pending:
+        while True:
+            t_cand, pe = heapq.heappop(heap)
+            if queues[pe]:
+                head_ready = queues[pe][0][0]
+                t_now = max(pe_free[pe], head_ready)
+                if t_now > t_cand + 1e-18:  # stale entry, re-push with new key
+                    heapq.heappush(heap, (t_now, pe))
+                    continue
+                break
+            # empty queue: stale, skip
+        r, _, u = heapq.heappop(queues[pe])
+        st[u] = max(pe_free[pe], r)
+        ft[u] = st[u] + comp[u]
+        pe_free[pe] = ft[u]
+        pe_busy[pe] += comp[u]
+        pending -= 1
+        for v, c in g.out_edges[u]:
+            delay = c * comm_scale if assignment[v] != pe else 0.0
+            ready_at[v] = max(ready_at[v], ft[u] + delay)
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                heapq.heappush(queues[assignment[v]], (ready_at[v], seq, v))
+                seq += 1
+                heapq.heappush(
+                    heap, (max(pe_free[assignment[v]], ready_at[v]),
+                           assignment[v]))
+        if queues[pe]:
+            heapq.heappush(heap, (max(pe_free[pe], queues[pe][0][0]), pe))
+
+    makespan = float(np.max(ft)) if n else 0.0
+    order = np.lexsort((np.arange(n), st))
+    return Schedule(st=st, ft=ft, makespan=makespan, exec_order=order,
+                    pe_busy=pe_busy)

@@ -1,0 +1,65 @@
+"""Binary-indexed (Fenwick) tree — per-level load accounting for LALB.
+
+The paper (§3.1.2) models "work within the span of a secondary cluster"
+as frequent range-sum queries with point updates over *levels*, and uses
+binary-indexed trees for O(log |V|) per operation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Fenwick:
+    __slots__ = ("n", "tree")
+
+    def __init__(self, n: int):
+        self.n = n
+        self.tree = np.zeros(n + 1, dtype=np.float64)
+
+    def add(self, i: int, delta: float) -> None:
+        """Point add at index i (0-based)."""
+        i += 1
+        while i <= self.n:
+            self.tree[i] += delta
+            i += i & (-i)
+
+    def prefix(self, i: int) -> float:
+        """Sum of [0, i] inclusive (0-based); i < 0 -> 0."""
+        s = 0.0
+        i += 1
+        while i > 0:
+            s += self.tree[i]
+            i -= i & (-i)
+        return s
+
+    def range_sum(self, lo: int, hi: int) -> float:
+        """Sum of [lo, hi] inclusive."""
+        if hi < lo:
+            return 0.0
+        return self.prefix(hi) - self.prefix(lo - 1)
+
+    def total(self) -> float:
+        return self.prefix(self.n - 1)
+
+
+class LevelIndex:
+    """Maps continuous tl(n) values to dense level ranks for the BITs."""
+
+    def __init__(self, tl: np.ndarray):
+        self.levels = np.unique(tl)
+        self.rank = {v: i for i, v in enumerate(self.levels.tolist())}
+
+    @property
+    def n(self) -> int:
+        return len(self.levels)
+
+    def of(self, t: float) -> int:
+        return int(np.searchsorted(self.levels, t))
+
+    def lo_rank(self, t: float) -> int:
+        """First level >= t."""
+        return int(np.searchsorted(self.levels, t, side="left"))
+
+    def hi_rank(self, t: float) -> int:
+        """Last level <= t."""
+        return int(np.searchsorted(self.levels, t, side="right")) - 1

@@ -1,0 +1,210 @@
+"""Cost-annotated computational DAG — the object ParDNN partitions.
+
+The graph mirrors the paper's model (§2, Table 1): each node carries a
+computation cost ``comp(n)`` (seconds), a memory consumption ``mem(n)``
+(bytes of its output), and a node class (normal / residual / reference);
+each edge carries a communication cost ``comm(e)`` (seconds when the edge
+crosses devices, zero intra-device).
+
+Stored as flat numpy arrays + adjacency lists so that graphs with hundreds
+of thousands of nodes (the paper partitions up to ~190k) stay cheap.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# Node classes (§3.2.2)
+NORMAL = 0    # nor_ns: output memory lives from schedule time to last consumer
+RESIDUAL = 1  # res_ns: variables/optimizer state, survive across iterations
+REF = 2       # ref_ns: in-place mutators, co-located with their variable
+
+
+class CostGraph:
+    """Directed acyclic cost graph.
+
+    Nodes are dense ints ``0..n-1``. Edges are kept twice (out/in adjacency)
+    as parallel lists of ``(neighbor, comm_seconds, bytes)``.
+    """
+
+    def __init__(self) -> None:
+        self.comp: list[float] = []
+        self.mem: list[float] = []
+        self.ntype: list[int] = []
+        self.names: list[str] = []
+        self.out_edges: list[list[tuple[int, float]]] = []
+        self.in_edges: list[list[tuple[int, float]]] = []
+        # ref_ns -> index of the variable node it mutates (colocation constraint)
+        self.colocate_with: dict[int, int] = {}
+        self._topo: np.ndarray | None = None
+
+    # -- construction -----------------------------------------------------
+    def add_node(self, comp: float = 0.0, mem: float = 0.0,
+                 ntype: int = NORMAL, name: str = "") -> int:
+        nid = len(self.comp)
+        self.comp.append(float(comp))
+        self.mem.append(float(mem))
+        self.ntype.append(int(ntype))
+        self.names.append(name or f"n{nid}")
+        self.out_edges.append([])
+        self.in_edges.append([])
+        self._topo = None
+        return nid
+
+    def add_edge(self, src: int, dst: int, comm: float = 0.0) -> None:
+        if src == dst:
+            raise ValueError(f"self edge on node {src}")
+        self.out_edges[src].append((dst, float(comm)))
+        self.in_edges[dst].append((src, float(comm)))
+        self._topo = None
+
+    def finalize(self) -> "CostGraph":
+        """Convert cost lists to numpy and validate acyclicity."""
+        self.comp = np.asarray(self.comp, dtype=np.float64)
+        self.mem = np.asarray(self.mem, dtype=np.float64)
+        self.ntype = np.asarray(self.ntype, dtype=np.int8)
+        self.topo_order()  # raises on cycle
+        return self
+
+    # -- basic properties --------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self.out_edges)
+
+    @property
+    def num_edges(self) -> int:
+        return sum(len(e) for e in self.out_edges)
+
+    def total_comp(self) -> float:
+        return float(np.sum(self.comp))
+
+    def total_comm(self) -> float:
+        return sum(c for es in self.out_edges for _, c in es)
+
+    def ccr(self) -> float:
+        """Communication-to-computation ratio (§5.3.2)."""
+        tc = self.total_comp()
+        return self.total_comm() / tc if tc > 0 else 0.0
+
+    # -- orders & levels ----------------------------------------------------
+    def topo_order(self) -> np.ndarray:
+        """Kahn topological order (cached)."""
+        if self._topo is not None:
+            return self._topo
+        n = self.n
+        indeg = np.zeros(n, dtype=np.int64)
+        for u in range(n):
+            for v, _ in self.out_edges[u]:
+                indeg[v] += 1
+        stack = [u for u in range(n) if indeg[u] == 0]
+        order = []
+        while stack:
+            u = stack.pop()
+            order.append(u)
+            for v, _ in self.out_edges[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    stack.append(v)
+        if len(order) != n:
+            raise ValueError("cost graph has a cycle")
+        self._topo = np.asarray(order, dtype=np.int64)
+        return self._topo
+
+    def top_levels(self, active: np.ndarray | None = None) -> np.ndarray:
+        """tl(n): costliest path from any source to n, excluding n (Table 1).
+
+        ``active`` restricts to a subgraph (True = node present).
+        """
+        comp = np.asarray(self.comp)
+        tl = np.zeros(self.n, dtype=np.float64)
+        for u in self.topo_order():
+            if active is not None and not active[u]:
+                continue
+            base = tl[u] + comp[u]
+            for v, c in self.out_edges[u]:
+                if active is not None and not active[v]:
+                    continue
+                cand = base + c
+                if cand > tl[v]:
+                    tl[v] = cand
+        return tl
+
+    def bottom_levels(self, active: np.ndarray | None = None) -> np.ndarray:
+        """bl(n): costliest path from n to any sink, including n (Table 1)."""
+        comp = np.asarray(self.comp)
+        bl = np.zeros(self.n, dtype=np.float64)
+        for u in self.topo_order()[::-1]:
+            if active is not None and not active[u]:
+                continue
+            best = 0.0
+            for v, c in self.out_edges[u]:
+                if active is not None and not active[v]:
+                    continue
+                cand = c + bl[v]
+                if cand > best:
+                    best = cand
+            bl[u] = best + comp[u]
+        return bl
+
+    def weighted_levels(self, active: np.ndarray | None = None
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """w_lvl(n) = tl(n) + bl(n); returns (w_lvl, tl, bl)."""
+        tl = self.top_levels(active)
+        bl = self.bottom_levels(active)
+        return tl + bl, tl, bl
+
+    def critical_path_length(self) -> float:
+        _, _, bl = self.weighted_levels()
+        return float(np.max(bl)) if self.n else 0.0
+
+    # -- convenience --------------------------------------------------------
+    def subgraph_active(self, visited: np.ndarray) -> np.ndarray:
+        return ~visited
+
+    def edge_bytes(self, comm_to_bytes: float) -> float:
+        return self.total_comm() * comm_to_bytes
+
+
+@dataclass
+class Placement:
+    """Output of a partitioner: node -> device assignment + quality stats."""
+    assignment: np.ndarray                 # int array, node -> pe
+    k: int
+    makespan: float = float("nan")
+    peak_mem: np.ndarray | None = None     # per-pe peak bytes (after emulation)
+    feasible: bool = True                  # memory constraints met
+    moved_nodes: int = 0                   # Step-2 movements
+    stats: dict = field(default_factory=dict)
+
+    def loads(self, g: CostGraph) -> np.ndarray:
+        out = np.zeros(self.k)
+        np.add.at(out, self.assignment, np.asarray(g.comp))
+        return out
+
+    def cut_comm(self, g: CostGraph) -> float:
+        a = self.assignment
+        return sum(c for u in range(g.n) for v, c in g.out_edges[u]
+                   if a[u] != a[v])
+
+
+def random_dag(n: int, avg_deg: float = 2.5, seed: int = 0,
+               comp_scale: float = 1.0, mem_scale: float = 1.0,
+               comm_scale: float = 0.5, frac_residual: float = 0.05
+               ) -> CostGraph:
+    """Random layered DAG generator for tests/benchmarks."""
+    rng = np.random.default_rng(seed)
+    g = CostGraph()
+    for i in range(n):
+        ntype = RESIDUAL if rng.random() < frac_residual else NORMAL
+        g.add_node(comp=float(rng.exponential(comp_scale)) + 1e-6,
+                   mem=float(rng.exponential(mem_scale)) + 1e-6,
+                   ntype=ntype)
+    n_edges = int(n * avg_deg)
+    for _ in range(n_edges):
+        u = int(rng.integers(0, n - 1))
+        v = int(rng.integers(u + 1, n))
+        g.add_edge(u, v, comm=float(rng.exponential(comm_scale)))
+    return g.finalize()

@@ -1,0 +1,148 @@
+"""Step-2 stage 2: tracking memory consumption (§3.2.2, Eqn 2).
+
+Node classes:
+  * ``res_ns`` — outputs survive across iterations (variables, optimizer
+    state): charged to their pe for the whole horizon.
+  * ``nor_ns`` — output allocated when the node is scheduled, freed after
+    its *last direct descendant on each holding pe* has started.
+  * ``ref_ns`` — in-place mutators: no extra memory, must be co-located
+    with the variable they mutate.
+
+Eqn (2) charges, at time t on device pe:
+  1. all residual outputs assigned to pe,
+  2. outputs of normal nodes executing on pe at t,
+  3. outputs still held for not-yet-executed local descendants — both for
+     locally produced tensors and for copies received from other devices.
+
+The tracker performs one sweep over nodes in start-time order (O(|V|+|E|))
+maintaining the cumulative per-pe consumption, recording the peak, the
+full profile, and the data needed for the memory potentials M_pot(n, t)
+used by the overflow knapsack.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .graph import CostGraph, NORMAL, REF, RESIDUAL
+from .emulator import Schedule
+
+
+@dataclass
+class MemoryProfile:
+    peak: np.ndarray                    # per-pe peak bytes
+    peak_time: np.ndarray               # time of per-pe peak
+    residual: np.ndarray                # per-pe residual (always-live) bytes
+    events: list[list[tuple[float, float]]]   # per-pe (time, delta) sorted
+    # per (node): for each holding pe, the last local consumer (by st)
+    last_consumer: list[dict[int, int]] = field(default_factory=list)
+
+    def consumption_at(self, pe: int, t: float) -> float:
+        s = 0.0
+        for tt, d in self.events[pe]:
+            if tt > t:
+                break
+            s += d
+        return s
+
+    def first_overflow(self, caps: np.ndarray) -> list[tuple[int, float, float]]:
+        """Per-pe (pe, time, overflow_bytes) for the *peak* overflow; empty
+        if all within caps."""
+        out = []
+        for pe in range(len(self.peak)):
+            if self.peak[pe] > caps[pe]:
+                out.append((pe, float(self.peak_time[pe]),
+                            float(self.peak[pe] - caps[pe])))
+        return out
+
+
+def compute_profile(g: CostGraph, assignment: np.ndarray, sched: Schedule,
+                    k: int) -> MemoryProfile:
+    n = g.n
+    mem = np.asarray(g.mem)
+    ntype = np.asarray(g.ntype)
+    st = sched.st
+
+    residual = np.zeros(k)
+    events: list[list[tuple[float, float]]] = [[] for _ in range(k)]
+
+    # last consumer of each node's output per holding pe (by start time)
+    last_consumer: list[dict[int, int]] = [dict() for _ in range(n)]
+    for u in range(n):
+        for v, _ in g.out_edges[u]:
+            pv = int(assignment[v])
+            cur = last_consumer[u].get(pv)
+            if cur is None or st[v] > st[cur]:
+                last_consumer[u][pv] = v
+
+    for u in range(n):
+        pu = int(assignment[u])
+        if ntype[u] == REF:
+            continue  # no extra memory (§3.2.2)
+        if ntype[u] == RESIDUAL:
+            residual[pu] += mem[u]
+            # remote copies of residual reads: charged on the consumer pe
+            # until its last local consumer starts
+            for pv, v in last_consumer[u].items():
+                if pv != pu and mem[u] > 0:
+                    events[pv].append((sched.ft[u], mem[u]))
+                    events[pv].append((st[v] + 1e-18, -mem[u]))
+            continue
+        # normal node: allocated at st(u) on its own pe …
+        if mem[u] > 0:
+            free_t = max((st[v] for pv, v in last_consumer[u].items()
+                          if pv == pu), default=sched.ft[u])
+            events[pu].append((st[u], mem[u]))
+            events[pu].append((free_t + 1e-18, -mem[u]))
+            # … and copies held on each remote consumer pe
+            for pv, v in last_consumer[u].items():
+                if pv != pu:
+                    events[pv].append((sched.ft[u], mem[u]))
+                    events[pv].append((st[v] + 1e-18, -mem[u]))
+
+    peak = residual.copy()
+    peak_time = np.zeros(k)
+    for pe in range(k):
+        events[pe].sort(key=lambda e: e[0])
+        cum = residual[pe]
+        for t, d in events[pe]:
+            cum += d
+            if cum > peak[pe]:
+                peak[pe] = cum
+                peak_time[pe] = t
+    return MemoryProfile(peak=peak, peak_time=peak_time, residual=residual,
+                         events=events, last_consumer=last_consumer)
+
+
+def memory_potentials(g: CostGraph, assignment: np.ndarray, sched: Schedule,
+                      prof: MemoryProfile, pe: int, t: float) -> dict[int, float]:
+    """M_pot(n, t) for nodes assigned to ``pe`` (Table 1).
+
+    The memory that would be released on ``pe`` at time t if node n were
+    moved elsewhere: outputs of direct ancestors executed before t for
+    which n is the last local descendant, plus n's own output if n is
+    executing at t, plus n's residual footprint (moving a variable moves
+    its storage).
+    """
+    mem = np.asarray(g.mem)
+    ntype = np.asarray(g.ntype)
+    st, ft = sched.st, sched.ft
+    pot: dict[int, float] = {}
+    for u in np.where(assignment == pe)[0]:
+        u = int(u)
+        p = 0.0
+        if ntype[u] == RESIDUAL:
+            p += mem[u]
+        elif st[u] <= t <= ft[u]:
+            p += mem[u]
+        if st[u] >= t:  # not yet executed: its held inputs would be freed
+            for a, _ in g.in_edges[u]:
+                if ntype[a] == REF:
+                    continue
+                lc = prof.last_consumer[a].get(pe)
+                if lc == u and ft[a] <= t:
+                    p += mem[a]
+        if p > 0:
+            pot[u] = p
+    return pot

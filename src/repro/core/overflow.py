@@ -1,0 +1,121 @@
+"""Step-2 stage 3: addressing overflow (§3.2.3) — greedy 0-1 min-knapsack.
+
+Given an overflow O on device pe at time t, pick a set of nodes whose
+memory potentials at t sum to ≥ O while the total *move cost* (Eqn 4:
+node compute weight + communication with same-pe neighbors it would cut)
+is minimal. The paper solves this greedily with two heaps:
+
+  * ``ratio_heap``  — all candidates keyed by move_cost / M_pot
+    (the movement criteria: cheapest relief per byte first);
+  * ``big_heap``    — candidates with M_pot ≥ O keyed by move_cost
+    (a single such node can clear the whole overflow).
+
+At each pick, pop the top of both and take the one with the lower
+move_cost; the loser is pushed back. The chosen node moves to a device
+with enough headroom; a moved node is never moved again (Appendix A).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .graph import CostGraph, REF, RESIDUAL
+
+
+@dataclass
+class OverflowResult:
+    moved: list[tuple[int, int, int]]   # (node, from_pe, to_pe)
+    resolved: bool
+    stats: dict = field(default_factory=dict)
+
+
+def move_cost(g: CostGraph, assignment: np.ndarray, u: int) -> float:
+    """Eqn (4): comp(u) + comm with same-pe direct ancestors/descendants."""
+    pu = assignment[u]
+    c = float(g.comp[u])
+    for a, cm in g.in_edges[u]:
+        if assignment[a] == pu:
+            c += cm
+    for d, cm in g.out_edges[u]:
+        if assignment[d] == pu:
+            c += cm
+    return c
+
+
+def address_overflow(g: CostGraph, assignment: np.ndarray, pe: int,
+                     overflow: float, potentials: dict[int, float],
+                     headroom: np.ndarray, pinned: set[int]
+                     ) -> OverflowResult:
+    """One knapsack round for one (pe, t) overflow.
+
+    ``headroom``: spare bytes per pe (cap − predicted peak); updated
+    in place as nodes move. ``pinned``: nodes already moved in earlier
+    rounds — never reconsidered.
+    """
+    ntype = np.asarray(g.ntype)
+    ratio_heap: list[tuple[float, int]] = []
+    big_heap: list[tuple[float, int]] = []
+    mc: dict[int, float] = {}
+    for u, pot in potentials.items():
+        if u in pinned or pot <= 0 or ntype[u] == REF:
+            continue
+        cost = move_cost(g, assignment, u)
+        mc[u] = cost
+        heapq.heappush(ratio_heap, (cost / pot, u))
+        if pot >= overflow:
+            heapq.heappush(big_heap, (cost, u))
+
+    moved: list[tuple[int, int, int]] = []
+    removed: set[int] = set()
+    remaining = overflow
+
+    def pop_valid(h):
+        while h:
+            key, u = heapq.heappop(h)
+            if u not in removed:
+                return key, u
+        return None
+
+    while remaining > 1e-9:
+        top_r = pop_valid(ratio_heap)
+        top_b = pop_valid(big_heap)
+        if top_r is None and top_b is None:
+            break
+        if top_r is not None and top_b is not None:
+            # lower move_cost wins; loser goes back to its heap (§3.2.3)
+            if mc[top_r[1]] <= top_b[0]:
+                chosen = top_r[1]
+                heapq.heappush(big_heap, top_b)
+            else:
+                chosen = top_b[1]
+                heapq.heappush(ratio_heap, top_r)
+        else:
+            chosen = (top_r or top_b)[1]
+        removed.add(chosen)
+        pot = potentials[chosen]
+        # target: most headroom that fits the node's potential
+        order = np.argsort(-headroom)
+        target = -1
+        for cand in order:
+            if cand != pe and headroom[cand] >= pot:
+                target = int(cand)
+                break
+        if target < 0:
+            continue  # nobody can host it; try the next node (§3.2.3)
+        # ref-node colocation: moving a variable drags its mutators along
+        group = [chosen] + [r for r, var in g.colocate_with.items()
+                            if var == chosen]
+        for nmove in group:
+            assignment[nmove] = target
+            pinned.add(nmove)
+        moved.append((chosen, pe, target))
+        headroom[target] -= pot
+        headroom[pe] += pot
+        remaining -= pot
+
+    return OverflowResult(moved=moved, resolved=remaining <= 1e-9,
+                          stats={"requested": overflow,
+                                 "cleared": overflow - max(remaining, 0.0),
+                                 "candidates": len(mc)})

@@ -1,0 +1,198 @@
+"""Stage-III refinement (§3.1.3).
+
+Policy 1 — coarse, cluster level: look for a pair of secondary clusters
+(sc on pe_a, sc' on pe_b) with overlapping spans whose assignment swap
+improves load balance and/or total cut communication. Swapped pairs are
+marked and not revisited (Appendix A).
+
+Policy 2 — fine, node level: the McCreary critical-path pathology fix.
+After partitioning, intra-cluster communication is free, so the CP of the
+*partitioned* graph differs from the original. Repeatedly (≤ K rounds,
+since each needs a level recompute) find the partitioned CP and try to
+switch one endpoint of a cross-pe CP edge to the other side; keep the
+switch if it shortens the CP.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import CostGraph
+from .mapping import Mapping
+
+
+def _partitioned_levels(g: CostGraph, assignment: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """(tl, bl) where cross-pe edges cost comm(e) and intra-pe edges are free."""
+    comp = np.asarray(g.comp)
+    n = g.n
+    tl = np.zeros(n)
+    for u in g.topo_order():
+        base = tl[u] + comp[u]
+        au = assignment[u]
+        for v, c in g.out_edges[u]:
+            cand = base + (c if assignment[v] != au else 0.0)
+            if cand > tl[v]:
+                tl[v] = cand
+    bl = np.zeros(n)
+    for u in g.topo_order()[::-1]:
+        au = assignment[u]
+        best = 0.0
+        for v, c in g.out_edges[u]:
+            cand = bl[v] + (c if assignment[v] != au else 0.0)
+            if cand > best:
+                best = cand
+        bl[u] = best + comp[u]
+    return tl, bl
+
+
+def partitioned_cp_length(g: CostGraph, assignment: np.ndarray) -> float:
+    _, bl = _partitioned_levels(g, assignment)
+    return float(np.max(bl)) if g.n else 0.0
+
+
+def _trace_cp(g: CostGraph, assignment: np.ndarray,
+              tl: np.ndarray, bl: np.ndarray) -> list[int]:
+    """Follow the heaviest w_lvl chain from the CP head."""
+    n = g.n
+    w = tl + bl
+    cp_len = float(np.max(bl))
+    heads = [u for u in range(n) if np.isclose(w[u], cp_len) and tl[u] == 0.0]
+    if not heads:
+        heads = [int(np.argmax(w))]
+    cur = heads[0]
+    path = [cur]
+    while True:
+        nxt = -1
+        best = -np.inf
+        base = tl[cur] + g.comp[cur]
+        for v, c in g.out_edges[cur]:
+            eff = c if assignment[v] != assignment[cur] else 0.0
+            # successor on the CP continues the longest path
+            if np.isclose(tl[v], base + eff) and w[v] > best:
+                nxt, best = v, w[v]
+        if nxt < 0:
+            break
+        path.append(nxt)
+        cur = nxt
+    return path
+
+
+def refine_node_switching(g: CostGraph, assignment: np.ndarray, k: int,
+                          max_rounds: int | None = None,
+                          trials_per_round: int = 16) -> tuple[np.ndarray, dict]:
+    """Policy 2. Returns (assignment, stats)."""
+    assignment = assignment.copy()
+    rounds = max_rounds if max_rounds is not None else k
+    switches = 0
+    cp_before = partitioned_cp_length(g, assignment)
+    cp_cur = cp_before
+    for _ in range(rounds):
+        tl, bl = _partitioned_levels(g, assignment)
+        cp = _trace_cp(g, assignment, tl, bl)
+        improved = False
+        tried = 0
+        for i in range(len(cp) - 1):
+            u, v = cp[i], cp[i + 1]
+            if assignment[u] == assignment[v]:
+                continue
+            if tried >= trials_per_round:
+                break
+            tried += 1
+            for node, target in ((u, assignment[v]), (v, assignment[u])):
+                old = assignment[node]
+                assignment[node] = target
+                new_cp = partitioned_cp_length(g, assignment)
+                if new_cp < cp_cur - 1e-15:
+                    cp_cur = new_cp
+                    switches += 1
+                    improved = True
+                    break
+                assignment[node] = old
+            if improved:
+                break
+        if not improved:
+            break
+    return assignment, {"cp_before": cp_before, "cp_after": cp_cur,
+                        "switches": switches}
+
+
+def refine_cluster_swaps(g: CostGraph, m: Mapping, s_clusters: list[list[int]],
+                         k: int, max_candidates: int = 8
+                         ) -> tuple[np.ndarray, dict]:
+    """Policy 1. Swap secondary clusters with overlapping spans when the swap
+    improves (load balance, cut communication) Pareto-wise."""
+    assignment = m.assignment.copy()
+    comp = np.asarray(g.comp)
+
+    if not m.spans:
+        return assignment, {"swaps": 0}
+
+    loads = np.zeros(k)
+    np.add.at(loads, assignment, comp)
+
+    def cluster_cut(cl: list[int], a: np.ndarray) -> float:
+        tot = 0.0
+        for u in cl:
+            pu = a[u]
+            for v, c in g.out_edges[u]:
+                if a[v] != pu:
+                    tot += c
+            for p, c in g.in_edges[u]:
+                if a[p] != pu:
+                    tot += c
+        return tot
+
+    order = sorted(m.spans.keys(), key=lambda ci: m.spans[ci][0])
+    starts = np.array([m.spans[ci][0] for ci in order])
+    swapped: set[int] = set()
+    swaps = 0
+
+    for pos, ci in enumerate(order):
+        if ci in swapped or ci not in m.secondary_pe:
+            continue
+        cl = s_clusters[ci]
+        if not cl:
+            continue
+        pe_a = assignment[cl[0]]
+        lo_t, hi_t = m.spans[ci]
+        j0 = int(np.searchsorted(starts, lo_t, side="left"))
+        j1 = int(np.searchsorted(starts, hi_t, side="right"))
+        cands = [order[j] for j in range(j0, min(j1, j0 + max_candidates))]
+        for cj in cands:
+            if cj == ci or cj in swapped or cj not in m.secondary_pe:
+                continue
+            cl2 = s_clusters[cj]
+            if not cl2:
+                continue
+            pe_b = assignment[cl2[0]]
+            if pe_b == pe_a:
+                continue
+            w1 = float(np.sum(comp[cl]))
+            w2 = float(np.sum(comp[cl2]))
+            old_imb = max(loads[pe_a], loads[pe_b])
+            new_a = loads[pe_a] - w1 + w2
+            new_b = loads[pe_b] - w2 + w1
+            new_imb = max(new_a, new_b)
+            old_cut = cluster_cut(cl, assignment) + cluster_cut(cl2, assignment)
+            # try the swap
+            for u in cl:
+                assignment[u] = pe_b
+            for u in cl2:
+                assignment[u] = pe_a
+            new_cut = cluster_cut(cl, assignment) + cluster_cut(cl2, assignment)
+            better_bal = new_imb < old_imb - 1e-15
+            better_cut = new_cut < old_cut - 1e-15
+            no_worse = new_imb <= old_imb + 1e-15 and new_cut <= old_cut + 1e-15
+            if no_worse and (better_bal or better_cut):
+                loads[pe_a] = new_a
+                loads[pe_b] = new_b
+                swapped.add(ci)
+                swapped.add(cj)
+                swaps += 1
+                break
+            # revert
+            for u in cl:
+                assignment[u] = pe_a
+            for u in cl2:
+                assignment[u] = pe_b
+    return assignment, {"swaps": swaps}

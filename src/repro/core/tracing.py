@@ -1,0 +1,312 @@
+"""jaxpr → CostGraph tracing (+ recorded program for the graph executor).
+
+ParDNN is framework-external: it consumes an annotated operator DAG. In the
+JAX world the "TensorFlow graph + profile" of the paper becomes "jaxpr +
+analytic cost model". ``trace_cost_graph`` traces any JAX callable into a
+``CostGraph`` whose nodes are jaxpr equations (ops), annotated with:
+
+  comp(n) — roofline seconds: max(FLOPs / peak·eff, bytes / HBM bw)
+  mem(n)  — output bytes
+  comm(e) — link latency + bytes / link bw
+
+Call-like primitives (pjit, remat, custom_jvp/vjp, closed_call) are
+inlined; ``scan`` bodies are unrolled ``length`` times (true per-layer
+nodes) up to ``max_scan_unroll`` (remaining iterations are folded into the
+unrolled nodes' costs).
+
+With ``record=True`` the tracer additionally captures an executable
+node-level program — each node's primitive, params and positional inputs
+as ``(src_node, out_idx)`` or literals — which ``core.executor`` replays
+on real devices under a ParDNN placement (the paper's "placement file →
+execution engine" path).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from .costmodel import DeviceModel, TPU_V5E
+from .graph import CostGraph, NORMAL, RESIDUAL
+
+# env entry: Var -> (node_id, out_idx)
+Slot = tuple[int, int]
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64)
+                     * np.dtype(aval.dtype).itemsize)
+    except Exception:
+        return 0.0
+
+
+def _dot_flops(eqn) -> float:
+    (lhs_c, rhs_c), (lhs_b, rhs_b) = eqn.params["dimension_numbers"]
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = np.prod([a.shape[i] for i in lhs_b], dtype=np.float64) if lhs_b else 1.0
+    contract = np.prod([a.shape[i] for i in lhs_c], dtype=np.float64) if lhs_c else 1.0
+    m = np.prod([a.shape[i] for i in range(len(a.shape))
+                 if i not in lhs_c and i not in lhs_b], dtype=np.float64)
+    n = np.prod([b.shape[i] for i in range(len(b.shape))
+                 if i not in rhs_c and i not in rhs_b], dtype=np.float64)
+    return 2.0 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    out_elems = np.prod(out.shape, dtype=np.float64)
+    kernel_elems = np.prod(rhs.shape, dtype=np.float64)
+    cout = rhs.shape[eqn.params["dimension_numbers"].rhs_spec[0]] or 1
+    return 2.0 * out_elems * kernel_elems / max(cout, 1)
+
+
+_EXPENSIVE = {"dot_general": _dot_flops, "conv_general_dilated": _conv_flops}
+_CHEAP_MULT = {
+    "reduce_sum": 1.0, "reduce_max": 1.0, "reduce_min": 1.0,
+    "cumsum": 1.0, "cumlogsumexp": 3.0, "argmax": 1.0, "argmin": 1.0,
+    "exp": 4.0, "log": 4.0, "tanh": 4.0, "logistic": 4.0, "erf": 6.0,
+    "rsqrt": 2.0, "sqrt": 2.0, "sort": 8.0, "top_k": 8.0,
+    "integer_pow": 2.0, "pow": 6.0,
+}
+_CALL_PRIMS = {"pjit", "closed_call", "core_call", "xla_call", "remat",
+               "checkpoint", "remat2", "custom_jvp_call", "custom_vjp_call",
+               "custom_vjp_call_jaxpr", "custom_jvp_call_jaxpr"}
+
+
+def _flops_of(eqn) -> float:
+    name = eqn.primitive.name
+    if name in _EXPENSIVE:
+        return _EXPENSIVE[name](eqn)
+    out_elems = sum(np.prod(v.aval.shape, dtype=np.float64)
+                    for v in eqn.outvars if hasattr(v.aval, "shape"))
+    in_elems = sum(np.prod(v.aval.shape, dtype=np.float64)
+                   for v in eqn.invars
+                   if hasattr(getattr(v, "aval", None), "shape"))
+    mult = _CHEAP_MULT.get(name, 1.0)
+    if name.startswith("reduce") or name in ("cumsum",):
+        return in_elems * mult
+    return out_elems * mult
+
+
+def _subjaxpr_of(eqn):
+    p = eqn.params
+    sub = p.get("jaxpr") or p.get("call_jaxpr") or p.get("fun_jaxpr")
+    return sub
+
+
+class _Tracer:
+    def __init__(self, dev: DeviceModel, max_scan_unroll: int,
+                 record: bool = False):
+        self.g = CostGraph()
+        self.dev = dev
+        self.max_scan_unroll = max_scan_unroll
+        self.record = record
+        # node -> (primitive, params, inputs); inputs: ("slot", nid, idx) or ("lit", v)
+        self.program: dict[int, tuple] = {}
+        self.n_outputs: dict[int, int] = {}
+
+    def _edge(self, src: int, dst: int, nbytes: float) -> None:
+        self.g.add_edge(src, dst, comm=self.dev.comm_seconds(nbytes))
+
+    # ------------------------------------------------------------------
+    def trace_jaxpr(self, jaxpr, env: dict[Any, Slot]) -> dict[Any, Slot]:
+        """Walk eqns; ``env`` maps jaxpr Var -> (node, out_idx)."""
+        g, dev = self.g, self.dev
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in _CALL_PRIMS:
+                sub = _subjaxpr_of(eqn)
+                if sub is not None:
+                    inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                    inner_env: dict[Any, Slot] = {}
+                    for iv, ov in zip(inner.invars, eqn.invars):
+                        if not isinstance(ov, jcore.Literal) and ov in env:
+                            inner_env[iv] = env[ov]
+                    out_env = self.trace_jaxpr(inner, inner_env)
+                    for ov_eqn, ov_inner in zip(eqn.outvars, inner.outvars):
+                        if isinstance(ov_inner, jcore.Literal):
+                            continue
+                        slot = out_env.get(ov_inner)
+                        if slot is not None:
+                            env[ov_eqn] = slot
+                    continue
+            if name == "scan":
+                self._trace_scan(eqn, env)
+                continue
+
+            out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            in_bytes = sum(_aval_bytes(v.aval) for v in eqn.invars
+                           if hasattr(getattr(v, "aval", None), "shape"))
+            flops = _flops_of(eqn)
+            comp = dev.compute_seconds(flops, in_bytes + out_bytes)
+            nid = g.add_node(comp=comp, mem=out_bytes, ntype=NORMAL,
+                             name=name)
+            seen_srcs: set[int] = set()
+            rec_inputs = []
+            for v in eqn.invars:
+                if isinstance(v, jcore.Literal):
+                    rec_inputs.append(("lit", v.val))
+                    continue
+                slot = env.get(v)
+                if slot is None:
+                    rec_inputs.append(("lit", None))
+                    continue
+                rec_inputs.append(("slot", slot[0], slot[1]))
+                if slot[0] not in seen_srcs:
+                    seen_srcs.add(slot[0])
+                    self._edge(slot[0], nid, _aval_bytes(v.aval))
+            for i, ov in enumerate(eqn.outvars):
+                env[ov] = (nid, i)
+            if self.record:
+                self.program[nid] = (eqn.primitive, dict(eqn.params),
+                                     rec_inputs)
+                self.n_outputs[nid] = len(eqn.outvars)
+        return env
+
+    # ------------------------------------------------------------------
+    def _trace_scan(self, eqn, env: dict[Any, Slot]) -> None:
+        """Unroll scan bodies into real per-iteration nodes (layers).
+
+        Recording note: the executor requires a *full* unroll to stay
+        semantically exact, so with record=True the cap is ignored.
+        """
+        p = eqn.params
+        inner = p["jaxpr"].jaxpr
+        length = int(p["length"])
+        num_consts = int(p["num_consts"])
+        num_carry = int(p["num_carry"])
+        unroll = length if self.record else min(length, self.max_scan_unroll)
+        cost_mult = length / unroll
+        const_in = eqn.invars[:num_consts]
+        carry_in = eqn.invars[num_consts:num_consts + num_carry]
+        xs_in = eqn.invars[num_consts + num_carry:]
+
+        def outer_slot(ov):
+            if isinstance(ov, jcore.Literal):
+                return None
+            return env.get(ov)
+
+        carry_slots = [outer_slot(v) for v in carry_in]
+        # xs slicing nodes (per unrolled iteration, when recording we must
+        # actually slice; without recording we link to the stacked array)
+        xs_slots = [outer_slot(v) for v in xs_in]
+        inner_xs_vars = inner.invars[num_consts + num_carry:]
+        ys_collect: list[list[Slot | None]] = [
+            [] for _ in inner.outvars[num_carry:]]
+
+        for it in range(unroll):
+            inner_env: dict[Any, Slot] = {}
+            for iv, ov in zip(inner.invars[:num_consts], const_in):
+                s = outer_slot(ov)
+                if s is not None:
+                    inner_env[iv] = s
+            for iv, s in zip(inner.invars[num_consts:num_consts + num_carry],
+                             carry_slots):
+                if s is not None:
+                    inner_env[iv] = s
+            for j, (iv, s) in enumerate(zip(inner_xs_vars, xs_slots)):
+                if s is None:
+                    continue
+                if self.record:
+                    # emit an explicit slice node: xs[it]
+                    aval = iv.aval
+                    nb = _aval_bytes(aval)
+                    nid = self.g.add_node(comp=0.0, mem=nb, ntype=NORMAL,
+                                          name=f"scan_slice_{it}")
+                    self._edge(s[0], nid, nb)
+                    self.program[nid] = ("__scan_slice__", {"index": it},
+                                         [("slot", s[0], s[1])])
+                    self.n_outputs[nid] = 1
+                    inner_env[iv] = (nid, 0)
+                else:
+                    inner_env[iv] = s
+            before = len(self.g.comp)
+            out_env = self.trace_jaxpr(inner, inner_env)
+            if cost_mult > 1.0:
+                for nid in range(before, len(self.g.comp)):
+                    self.g.comp[nid] *= cost_mult
+            new_carry = []
+            for ov_inner in inner.outvars[:num_carry]:
+                if isinstance(ov_inner, jcore.Literal):
+                    new_carry.append(None)
+                else:
+                    new_carry.append(out_env.get(ov_inner))
+            carry_slots = new_carry
+            for j, ov_inner in enumerate(inner.outvars[num_carry:]):
+                ys_collect[j].append(
+                    None if isinstance(ov_inner, jcore.Literal)
+                    else out_env.get(ov_inner))
+
+        for ov, s in zip(eqn.outvars[:num_carry], carry_slots):
+            if s is not None:
+                env[ov] = s
+        # stacked ys: emit a stack node per output when recording
+        for j, ov in enumerate(eqn.outvars[num_carry:]):
+            slots = [s for s in ys_collect[j] if s is not None]
+            if not slots:
+                continue
+            if self.record:
+                nb = _aval_bytes(ov.aval)
+                nid = self.g.add_node(comp=0.0, mem=nb, ntype=NORMAL,
+                                      name="scan_stack")
+                for s in slots:
+                    self._edge(s[0], nid, nb / max(len(slots), 1))
+                self.program[nid] = ("__scan_stack__", {},
+                                     [("slot", s[0], s[1]) for s in slots])
+                self.n_outputs[nid] = 1
+                env[ov] = (nid, 0)
+            else:
+                env[ov] = slots[-1]
+
+
+def trace_cost_graph(fn: Callable, *example_args,
+                     dev: DeviceModel = TPU_V5E,
+                     max_scan_unroll: int = 64,
+                     params_residual: bool = True,
+                     record: bool = False,
+                     **example_kwargs):
+    """Trace ``fn(*example_args)`` into a cost graph.
+
+    Top-level inputs become RESIDUAL nodes (parameters & step inputs —
+    memory that survives the step, matching the paper's res_ns).
+
+    Returns the CostGraph, or ``(CostGraph, TracedProgram)`` when
+    ``record=True``.
+    """
+    closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+    tr = _Tracer(dev, max_scan_unroll, record=record)
+    env: dict[Any, Slot] = {}
+    input_nodes: list[int] = []
+    const_nodes: list[tuple[int, Any]] = []
+    for cv, cval in zip(closed.jaxpr.constvars, closed.consts):
+        nid = tr.g.add_node(comp=0.0, mem=_aval_bytes(cv.aval),
+                            ntype=RESIDUAL, name="const")
+        env[cv] = (nid, 0)
+        const_nodes.append((nid, cval))
+    for iv in closed.jaxpr.invars:
+        nid = tr.g.add_node(
+            comp=0.0, mem=_aval_bytes(iv.aval),
+            ntype=RESIDUAL if params_residual else NORMAL, name="param")
+        env[iv] = (nid, 0)
+        input_nodes.append(nid)
+    out_env = tr.trace_jaxpr(closed.jaxpr, env)
+    g = tr.g.finalize()
+    if not record:
+        return g
+    out_slots = []
+    for ov in closed.jaxpr.outvars:
+        out_slots.append(None if isinstance(ov, jcore.Literal)
+                         else out_env.get(ov))
+    from .executor import TracedProgram
+    prog = TracedProgram(program=tr.program, n_outputs=tr.n_outputs,
+                         input_nodes=input_nodes, const_nodes=const_nodes,
+                         out_slots=out_slots,
+                         out_tree=jax.tree_util.tree_structure(
+                             jax.eval_shape(fn, *example_args,
+                                            **example_kwargs)),
+                         in_tree_example=(example_args, example_kwargs))
+    return g, prog

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+flash_attention — causal/SWA/GQA online-softmax attention (the hot spot of
+                  every attention arch; SWA mask for mixtral/gemma3)
+rwkv6           — chunked RWKV6 (Finch) linear recurrence (the hot spot of
+                  rwkv6-7b; no XLA primitive exists for it)
+"""

@@ -1,0 +1,2 @@
+"""Flash attention Pallas kernel package."""
+from . import kernel, ops, ref

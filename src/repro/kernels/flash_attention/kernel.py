@@ -1,0 +1,135 @@
+"""Flash attention — Pallas TPU kernel.
+
+Online-softmax attention with causal and sliding-window masking and GQA
+head grouping, tiled for VMEM/MXU:
+
+  grid = (B, H, Sq/block_q, Sk/block_k)   — k-blocks innermost (sequential
+  on TPU), with fp32 running-max/denominator/accumulator scratch carried
+  across k-blocks in VMEM. Fully-masked k-blocks are skipped (`pl.when`),
+  which halves causal work and makes sliding-window cost O(S·W).
+
+Block shapes are (block_q × head_dim) / (block_k × head_dim) VMEM tiles;
+head_dim is padded to a multiple of 128 by the ops.py wrapper so the MXU
+matmuls are hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  block_q: int, block_k: int, seq_q: int, seq_k: int,
+                  num_kblocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # block-level skip: entirely outside the causal cone / window
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        # newest q position must still see the oldest live k position
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = kpos < seq_k                            # seq padding
+        mask &= qpos < seq_q
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...][:, 0]                      # (bq,)
+        l_prev = l_ref[...][:, 0]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    @pl.when(ik == num_kblocks - 1)
+    def _finalize():
+        l = l_ref[...][:, 0]
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           sm_scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd); hd % 128 == 0 and
+    Sq % block_q == Sk % block_k == 0 (ops.py pads). GQA via KV | H."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = Sq // block_q
+    nk = Sk // block_k
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_q=Sq, seq_k=Sk,
+        num_kblocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,58 @@
+"""jit'd public wrapper around the flash-attention Pallas kernel.
+
+Handles layout (model uses (B, S, H, hd); kernel wants (B, H, S, hd)),
+pads head_dim to a multiple of 128 (MXU lane alignment) and sequence
+lengths to block multiples (masked via seq_q/seq_k inside the kernel),
+then slices the result back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    # lane alignment: pad head_dim to 128 multiple (scores unchanged by
+    # zero-padded q/k; v padding is sliced off the output)
+    hd_pad = max(-(-hd // 128) * 128, 128)
+    if hd_pad != hd:
+        qt = _pad_to(qt, 3, hd_pad)
+        kt = _pad_to(kt, 3, hd_pad)
+        vt = _pad_to(vt, 3, hd_pad)
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    qt = _pad_to(qt, 2, bq)
+    kt = _pad_to(kt, 2, bk)
+    vt = _pad_to(vt, 2, bk)
+
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, window=window, block_q=bq, block_k=bk,
+        sm_scale=1.0 / (hd ** 0.5), interpret=interpret)
+    if hd_pad != hd:
+        out = out[..., :hd]
+    out = out[:, :, :Sq]
+    return out.transpose(0, 2, 1, 3)

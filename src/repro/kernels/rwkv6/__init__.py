@@ -1,0 +1,2 @@
+"""RWKV6 Pallas kernel package."""
+from . import kernel, ops, ref

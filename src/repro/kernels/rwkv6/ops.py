@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the RWKV6 Pallas kernel: layout + padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rwkv6_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
+    """Model layout: r,k,v,w (B, S, H, hd); u (H, hd) -> y (B, S, H, hd).
+
+    Sequence padded to a chunk multiple; padded steps use w=1, k=0 so the
+    state and outputs of real steps are unaffected."""
+    B, S, H, hd = r.shape
+    pad = (-S) % chunk
+    rt = r.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    wt = w.transpose(0, 2, 1, 3)
+    if pad:
+        zeros = jnp.zeros((B, H, pad, hd), r.dtype)
+        rt = jnp.concatenate([rt, zeros], axis=2)
+        kt = jnp.concatenate([kt, zeros], axis=2)
+        vt = jnp.concatenate([vt, zeros], axis=2)
+        wt = jnp.concatenate([wt, jnp.ones((B, H, pad, hd), w.dtype)], axis=2)
+    y = rwkv6_kernel(rt, kt, vt, wt, u, chunk=chunk, interpret=interpret)
+    return y[:, :, :S].transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the RWKV6 kernel: exact step-wise recurrence.
+
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, w, u, state0=None):
+    """r,k,v,w: (B, H, S, hd) fp32; u: (H, hd).
+    Returns (y (B,H,S,hd), final_state (B,H,hd,hd))."""
+    B, H, S, hd = r.shape
+    S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state0 is None
+          else state0)
+
+    def step(St, xs):
+        rt, kt, vt, wt = xs                            # (B,H,hd)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        y = jnp.einsum("bhd,bhde->bhe", rt, St + u[None, :, :, None] * kv)
+        St = wt[..., None] * St + kv
+        return St, y
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (r, k, v, w))
+    S_last, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3), S_last

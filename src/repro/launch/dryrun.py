@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+cell lowers AND compiles under the production sharding config, and
+extract the roofline terms from the compiled artifact.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every
+jax import — jax locks the device count on first init). Never set this
+flag globally: smoke tests and benches see 1 device.
+
+Per cell it records into results/dryrun/<cell>.json:
+  * compiled.memory_analysis()  — per-device bytes (proves it fits)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline
+  * collective_bytes by op kind — parsed from the optimized HLO
+  * the three roofline terms + dominant bottleneck (§Roofline)
+
+Usage:
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --list
+Flags for §Perf iterations: --remat, --tag (variant label kept in the
+result file name so baselines are never overwritten).
+"""
+import argparse       # noqa: E402
+import json           # noqa: E402
+import re             # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+import numpy as np    # noqa: E402
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config,  # noqa: E402
+                           shape_skip_reason)
+from repro.core.costmodel import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,  # noqa: E402
+                                  TPU_V5E_PEAK_FLOPS)
+from repro.launch.mesh import make_production_mesh, mesh_num_chips  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1.0
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum operand sizes of every collective op in optimized HLO.
+
+    HLO text inlines operand shapes:
+      %ag = bf16[512,14336]{...} all-gather(bf16[32,14336]{...} %p), ...
+    The first shape on the line is the result; the rest are operands.
+    '-done' ops are skipped (their '-start' was counted)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        line = line.strip()
+        if "-done" in line:
+            continue
+        m = re.search(r"=\s*(?:\([^)]*\)\s*)?[a-z0-9]+\[[0-9,]*\][^ ]*\s+"
+                      r"([a-z\-]+)", line)
+        if not m:
+            continue
+        op = m.group(1).replace("-start", "")
+        if op not in _COLLECTIVES:
+            continue
+        # operands = shapes appearing inside the call parens
+        paren = line.find(op)
+        args = line[paren:]
+        shapes = _SHAPE_RE.findall(args)
+        nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        if nbytes == 0.0:
+            # fall back to the result shape
+            shapes = _SHAPE_RE.findall(line[:paren])
+            nbytes = sum(_shape_bytes(d, s) for d, s in shapes[:1])
+        out[op] += nbytes
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": float(sum(out.values()))}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> dict:
+    t_c = flops / (chips * TPU_V5E_PEAK_FLOPS)
+    t_m = hbm_bytes / (chips * TPU_V5E_HBM_BW)
+    t_x = coll_bytes / (chips * TPU_V5E_ICI_BW)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom[1], "bound_s": dom[0]}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D=batch
+    tokens; train includes the 3x backward factor already (6 = 2 fwd + 4
+    bwd per param per token)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/slot
+
+
+def _lower_cell(cfg, shape, mesh, remat: str):
+    from repro.train.step import (abstract_train_args, abstract_serve_args,
+                                  build_serve_step, build_train_step)
+    if shape.kind == "train":
+        built = build_train_step(cfg, mesh, remat_policy=remat)
+        p_abs, o_abs, b_abs = abstract_train_args(cfg, mesh, shape)
+        return built.fn.lower(p_abs, o_abs, b_abs)
+    if shape.kind == "prefill":
+        from repro.train.step import build_prefill_step
+        from repro.models.io_spec import params_spec, prefill_batch_spec
+        built = build_prefill_step(cfg, mesh, max_len=shape.seq_len)
+        return built.fn.lower(
+            params_spec(cfg),
+            prefill_batch_spec(cfg, shape.global_batch, shape.seq_len))
+    from repro.models.io_spec import params_spec
+    built = build_serve_step(cfg, mesh, shape)
+    c_abs, t_abs, pos_abs = abstract_serve_args(cfg, shape)
+    return built.fn.lower(params_spec(cfg), c_abs, t_abs, pos_abs)
+
+
+def _compile_metrics(cfg, shape, mesh, remat: str) -> dict:
+    """Lower+compile once; return cost/collective metrics."""
+    lowered = _lower_cell(cfg, shape, mesh, remat)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll, "hlo_size": len(hlo), "compiled": compiled}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             remat: str = "dots", tag: str = "",
+             roofline: bool = True) -> dict:
+    """One dry-run cell.
+
+    Compile #1 (deployment program, scanned): proves lower+compile,
+    memory_analysis, collective schedule. Compiles #2/#3 (ROOFLINE_MODE,
+    layer-scan unroll 1 and 2): XLA's HloCostAnalysis counts while bodies
+    once, so with u body copies cost(u) = fixed + u·body; two points give
+    body = C2−C1 and the exact per-device total fixed + P·body =
+    C1 + (P−1)·(C2−C1), with inner scans (attention kv-chunks, CE chunks,
+    ssm chunks) flattened by ROOFLINE_MODE. Costs are per-device (the
+    SPMD module is one replica's program): global = per-device × chips."""
+    from repro.configs.base import SHAPES
+    from repro.models.layers import roofline_mode
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = shape_skip_reason(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "SKIP", "reason": skip}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh_num_chips(mesh)
+
+    # --- compile 1: the deployment program --------------------------------
+    t0 = time.perf_counter()
+    lowered = _lower_cell(cfg, shape, mesh, remat)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_d[k] = int(v)
+    hlo = compiled.as_text()
+    sched_coll = collective_bytes_from_hlo(hlo)
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "OK", "tag": tag, "remat": remat, "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "per_device_total_bytes": (
+            (mem_d.get("argument_size_in_bytes", 0)
+             + mem_d.get("temp_size_in_bytes", 0)
+             + mem_d.get("output_size_in_bytes", 0)
+             - mem_d.get("alias_size_in_bytes", 0)) if mem_d else None),
+        "collective_schedule": sched_coll["counts"],
+        "hlo_size_chars": len(hlo),
+    }
+    del compiled, hlo
+
+    # --- compiles 2+3: roofline accounting --------------------------------
+    if roofline and mesh_kind == "single":
+        P_ = cfg.num_periods
+        with roofline_mode(1):
+            c1 = _compile_metrics(cfg, shape, mesh, remat)
+        if P_ > 1:
+            with roofline_mode(2):
+                c2 = _compile_metrics(cfg, shape, mesh, remat)
+            def extrap(a, b):
+                return a + (P_ - 1) * (b - a)
+            flops_dev = extrap(c1["flops"], c2["flops"])
+            bytes_dev = extrap(c1["bytes"], c2["bytes"])
+            coll_dev = {k: extrap(c1["coll"]["bytes"][k],
+                                  c2["coll"]["bytes"][k])
+                        for k in c1["coll"]["bytes"]}
+        else:
+            flops_dev, bytes_dev = c1["flops"], c1["bytes"]
+            coll_dev = c1["coll"]["bytes"]
+        coll_total_dev = float(sum(max(v, 0.0) for v in coll_dev.values()))
+        flops_global = flops_dev * chips
+        bytes_global = bytes_dev * chips
+        coll_global = coll_total_dev * chips
+        terms = roofline_terms(flops_global, bytes_global, coll_global,
+                               chips)
+        mf = model_flops(cfg, shape)
+        res.update({
+            "hlo_flops": flops_global,
+            "hlo_bytes": bytes_global,
+            "collective_bytes_by_op": {k: v * chips
+                                       for k, v in coll_dev.items()},
+            "collective_bytes": coll_global,
+            "roofline": terms,
+            "model_flops": mf,
+            "useful_flops_ratio": (mf / flops_global if flops_global
+                                   else None),
+        })
+    return res
+
+
+def cell_name(arch, shape, mesh_kind, tag=""):
+    t = f"__{tag}" if tag else ""
+    return f"{arch}__{shape}__{mesh_kind}{t}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ASSIGNED_ARCHS if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    if args.list:
+        for a, s, m in cells:
+            skip = shape_skip_reason(get_config(a), SHAPES[s])
+            print(f"{cell_name(a, s, m):60s} "
+                  f"{'SKIP: ' + skip if skip else 'RUN'}")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    for a, s, m in cells:
+        name = cell_name(a, s, m, args.tag)
+        path = os.path.join(args.out, name + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[cached] {name}")
+            continue
+        print(f"[run] {name} ...", flush=True)
+        t0 = time.perf_counter()
+        try:
+            res = run_cell(a, s, m, remat=args.remat, tag=args.tag)
+        except Exception as e:
+            res = {"arch": a, "shape": s, "mesh": m, "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        res["wall_s"] = round(time.perf_counter() - t0, 1)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        status = res["status"]
+        extra = ""
+        if status == "OK" and "roofline" in res:
+            r = res["roofline"]
+            extra = (f"dom={r['dominant']} bound={r['bound_s']:.4f}s "
+                     f"flops={res['hlo_flops']:.3g}")
+        elif status == "OK":
+            mem = res.get("per_device_total_bytes")
+            extra = (f"compile-only mem/dev="
+                     f"{mem / 2**30:.1f}G" if mem else "compile-only")
+        elif status == "FAIL":
+            extra = res["error"][:200]
+        print(f"[{status}] {name} ({res['wall_s']}s) {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

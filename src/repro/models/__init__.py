@@ -1,0 +1,8 @@
+"""Model substrate: layers, MoE, SSM, RWKV, assembly, IO specs."""
+from .transformer import (decode_step, encoder_logits, forward, init_cache,
+                          init_params, loss_fn, prefill)
+from .io_spec import input_specs, params_spec, cache_spec
+
+__all__ = ["decode_step", "encoder_logits", "forward", "init_cache",
+           "init_params", "loss_fn", "prefill", "input_specs",
+           "params_spec", "cache_spec"]

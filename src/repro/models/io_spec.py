@@ -1,0 +1,62 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation (dry-run pattern).
+
+Shapes come from the assignment's shape table; archs with a stubbed
+modality frontend (``[vlm]``/``[audio]``) receive precomputed patch/frame
+*embeddings* of shape (B, S, D) instead of token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def train_batch_spec(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    if cfg.frontend is not None:
+        return {
+            "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                           jnp.dtype(cfg.dtype)),
+            "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+
+
+def prefill_batch_spec(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    if cfg.frontend is not None:
+        return {"embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))}
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+
+def decode_token_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    from .transformer import init_cache
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def params_spec(cfg: ModelConfig):
+    from .transformer import init_params
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """All abstract inputs for the (arch × shape) cell's step function."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": train_batch_spec(cfg, B, S)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_spec(cfg, B, S)}
+    if shape.kind == "decode":
+        return {"tokens": decode_token_spec(cfg, B),
+                "caches": cache_spec(cfg, B, S),
+                "cache_pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)

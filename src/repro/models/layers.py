@@ -1,0 +1,435 @@
+"""Model building blocks (pure functional JAX).
+
+Conventions:
+  * params are nested dicts of jnp arrays;
+  * activations: x is (B, S, D); attention heads (B, S, H, hd);
+  * norms/softmax run in fp32 regardless of compute dtype;
+  * ``shard(x, kind)`` applies the active activation-sharding plan
+    (set by the launcher / dry-run; no-op in single-device tests).
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------
+# Activation sharding plan: logical kind -> PartitionSpec. Installed by
+# launch/dryrun/train; empty during smoke tests (no mesh -> no-op).
+_ACT_PLAN: dict[str, P] = {}
+# Attention implementation: "xla" (chunked jnp), "pallas", "pallas_interpret"
+_ATTN_IMPL: str = "xla"
+# Roofline-accounting mode (launch/dryrun.py): XLA's HloCostAnalysis counts
+# while-loop bodies ONCE, so for cost extraction we (a) flatten inner scans
+# (attention kv-chunks, CE chunks, ssm/rwkv chunks) and (b) compile the
+# layer-period scan at unroll∈{1,2} and extrapolate the exact total.
+ROOFLINE_MODE: bool = False
+ROOFLINE_UNROLL: int = 1
+
+
+@contextmanager
+def roofline_mode(unroll: int = 1):
+    global ROOFLINE_MODE, ROOFLINE_UNROLL
+    old = (ROOFLINE_MODE, ROOFLINE_UNROLL)
+    ROOFLINE_MODE, ROOFLINE_UNROLL = True, unroll
+    try:
+        yield
+    finally:
+        ROOFLINE_MODE, ROOFLINE_UNROLL = old
+
+
+@contextmanager
+def activation_sharding(plan: dict[str, P]):
+    global _ACT_PLAN
+    old = _ACT_PLAN
+    _ACT_PLAN = plan
+    try:
+        yield
+    finally:
+        _ACT_PLAN = old
+
+
+@contextmanager
+def attention_impl(name: str):
+    global _ATTN_IMPL
+    old = _ATTN_IMPL
+    _ATTN_IMPL = name
+    try:
+        yield
+    finally:
+        _ATTN_IMPL = old
+
+
+def shard(x: jax.Array, kind: str) -> jax.Array:
+    spec = _ACT_PLAN.get(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def plan_value(key: str, default=None):
+    """Non-spec entries of the activation plan (e.g. _moe_group_divisor)."""
+    return _ACT_PLAN.get(key, default)
+
+
+# ------------------------------------------------------------------ util
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms
+def norm_init(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype=jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=jnp.float32)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """qk-norm over the head dim (gemma3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+def update_cache(cache: jax.Array, new: jax.Array, pos, *, axis: int = 1
+                 ) -> jax.Array:
+    """Write ``new`` into ``cache`` at sequence position ``pos``.
+
+    ``pos`` may be a scalar (uniform batch) or a (B,) vector (continuous
+    batching: each slot at its own decode position)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), pos, axis=axis)
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), p, axis=axis - 1))(cache, new, pos)
+
+
+# ------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return jax.nn.silu(x) if cfg.act == "silu" else jax.nn.gelu(x)
+
+
+# ----------------------------------------------------------------- MLP
+def mlp_init(cfg: ModelConfig, key, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, f, dt),
+         "w_down": dense_init(ks[1], f, d, dt)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[2], d, f, dt)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    up = x @ p["w_up"]
+    if cfg.gated_mlp:
+        up = activation(cfg, x @ p["w_gate"]) * up
+    else:
+        up = activation(cfg, up)
+    up = shard(up, "btf")
+    return up @ p["w_down"]
+
+
+# ------------------------------------------------------------- attention
+def gqa_init(cfg: ModelConfig, key):
+    d, dt = cfg.d_model, dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    p = {"wq": dense_init(ks[0], d, cfg.q_dim, dt),
+         "wk": dense_init(ks[1], d, cfg.kv_dim, dt),
+         "wv": dense_init(ks[2], d, cfg.kv_dim, dt),
+         "wo": dense_init(ks[3], cfg.q_dim, d, dt)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _chunked_gqa(q, k, v, *, causal: bool, window: int | None,
+                 q_offset, chunk: int = 1024, softcap: float = 0.0):
+    """Online-softmax attention, chunked over KV — the XLA twin of the
+    Pallas flash kernel (kernels/flash_attention). q: (B,Sq,H,hd),
+    k/v: (B,Sk,KV,hd). ``q_offset``: absolute position of q[0] (decode);
+    scalar or (B,) array."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    if ROOFLINE_MODE:
+        chunk = Sk  # flatten the kv scan so cost analysis sees all FLOPs
+    nchunks = max(Sk // chunk, 1)
+    chunk = Sk // nchunks
+    q_pos = (jnp.asarray(q_offset).reshape(-1, 1)
+             + jnp.arange(Sq)[None, :])                  # (B|1, Sq)
+
+    def body(carry, kv_c):
+        m, l, acc = carry
+        k_c, v_c, start = kv_c
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = start + jnp.arange(chunk)                 # (chunk,)
+        mask = jnp.ones((), dtype=bool)
+        qp = q_pos[:, None, None, :, None]               # (B|1,1,1,Sq,1)
+        kp = kpos[None, None, None, None, :]
+        if causal:
+            mask = mask & (kp <= qp)
+        if window is not None:
+            mask = mask & (kp > qp - window)
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isneginf(s), 0.0, p)
+        corr = jnp.exp(jnp.where(jnp.isneginf(m), 0.0, m) - m_safe)
+        corr = jnp.where(jnp.isneginf(m), 0.0, corr)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v_c.dtype), v_c,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, Sq, dv), jnp.float32)
+    ks = k.reshape(B, nchunks, chunk, KV, hd).swapaxes(0, 1)
+    vs = v.reshape(B, nchunks, chunk, KV, dv).swapaxes(0, 1)
+    starts = jnp.arange(nchunks) * chunk
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (ks, vs, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def _plain_gqa(q, k, v, *, causal, window, q_offset, softcap: float = 0.0):
+    """O(S²)-memory reference path (small shapes / decode)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = (jnp.asarray(q_offset).reshape(-1, 1)
+             + jnp.arange(Sq)[None, :])
+    kp = jnp.arange(k.shape[1])
+    mask = jnp.ones((), dtype=bool)
+    qp = q_pos[:, None, None, :, None]
+    kpb = kp[None, None, None, None, :]
+    if causal:
+        mask = mask & (kpb <= qp)
+    if window is not None:
+        mask = mask & (kpb > qp - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def multi_head_attention(q, k, v, *, causal: bool, window: int | None,
+                         q_offset=0, softcap: float = 0.0) -> jax.Array:
+    """Dispatch on the active implementation."""
+    Sk = k.shape[1]
+    if _ATTN_IMPL.startswith("pallas") and q.shape[1] > 1:
+        from repro.kernels.flash_attention import ops as fops
+        return fops.flash_attention(
+            q, k, v, causal=causal, window=window,
+            interpret=_ATTN_IMPL == "pallas_interpret")
+    if q.shape[1] == 1 or Sk <= 2048:
+        return _plain_gqa(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, softcap=softcap)
+    return _chunked_gqa(q, k, v, causal=causal, window=window,
+                        q_offset=q_offset, softcap=softcap)
+
+
+def apply_gqa(cfg: ModelConfig, p, x: jax.Array, *, positions,
+              is_global: bool, kv_cache=None, cache_pos=None):
+    """GQA attention layer. Training/prefill: kv_cache None -> full seq.
+    Decode: kv_cache = dict(k=(B,Smax,KV,hd), v=...), cache_pos scalar.
+
+    Returns (out, new_kv_cache)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
+    theta = (cfg.rope_theta_global if (is_global and cfg.rope_theta_global)
+             else cfg.rope_theta)
+    if not cfg.encoder_only:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    q, k, v = shard(q, "bshd"), shard(k, "bskd"), shard(v, "bskd")
+    window = None if is_global else cfg.sliding_window
+    if kv_cache is None:
+        out = multi_head_attention(q, k, v, causal=cfg.causal, window=window,
+                                   q_offset=0, softcap=cfg.softcap)
+        new_cache = None
+    else:
+        ck = update_cache(kv_cache["k"], k, cache_pos)
+        cv = update_cache(kv_cache["v"], v, cache_pos)
+        out = multi_head_attention(q, ck, cv, causal=True, window=window,
+                                   q_offset=cache_pos, softcap=cfg.softcap)
+        new_cache = {"k": ck, "v": cv}
+    out = shard(out, "bshd")
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dtype)}
+
+
+# ------------------------------------------------------------------- MLA
+def mla_init(cfg: ModelConfig, key):
+    """Multi-head Latent Attention (DeepSeek-V2). KV is compressed into a
+    ``kv_lora_rank`` latent + a shared rope key."""
+    d, dt = cfg.d_model, dtype_of(cfg)
+    H = cfg.num_heads
+    r = cfg.kv_lora_rank
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, H * qk, dt),
+        "w_dkv": dense_init(ks[1], d, r, dt),          # down-proj latent
+        "w_kr": dense_init(ks[2], d, cfg.qk_rope_dim, dt),  # shared rope key
+        "w_uk": dense_init(ks[3], r, H * cfg.qk_nope_dim, dt),
+        "w_uv": dense_init(ks[4], r, H * cfg.v_head_dim, dt),
+        "wo": dense_init(ks[5], H * cfg.v_head_dim, d, dt),
+        "kv_norm": jnp.ones((r,), jnp.float32),
+    }
+
+
+def apply_mla(cfg: ModelConfig, p, x: jax.Array, *, positions,
+              kv_cache=None, cache_pos=None):
+    """MLA. Cache stores the latent (B,S,r) + rope key (B,S,rope_dim) —
+    the paper's memory saving. Decode uses the absorbed form (scores
+    computed in latent space; no per-step K/V up-projection of the cache).
+    Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    r, nd, rd, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    q = (x @ p["wq"]).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"]                                # (B,S,r)
+    c_kv = (c_kv.astype(jnp.float32)
+            * jax.lax.rsqrt(jnp.mean(jnp.square(
+                c_kv.astype(jnp.float32)), -1, keepdims=True) + cfg.norm_eps)
+            * p["kv_norm"]).astype(x.dtype)
+    k_rope = (x @ p["w_kr"]).reshape(B, S, 1, rd)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+
+    scale = 1.0 / math.sqrt(nd + rd)
+
+    if kv_cache is None:
+        # prefill/train: materialize per-head K/V from the latent
+        k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, nd)
+        v = (c_kv @ p["w_uv"]).reshape(B, S, H, vd)
+        k = jnp.concatenate([k_nope,
+                             jnp.broadcast_to(k_rope, (B, S, H, rd))], -1)
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        out = multi_head_attention(qq, k, v, causal=cfg.causal, window=None,
+                                   q_offset=0)
+        out = out.reshape(B, S, H * vd) @ p["wo"]
+        return out, None
+
+    # decode: absorbed attention over the latent cache
+    cc = update_cache(kv_cache["c_kv"], c_kv, cache_pos)
+    ck = update_cache(kv_cache["k_rope"], k_rope[:, :, 0], cache_pos)
+    # absorb W_uk into the query: q_lat (B,S,H,r)
+    w_uk = p["w_uk"].reshape(r, H, nd)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, cc,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope, ck,
+                        preferred_element_type=jnp.float32)
+    s = (s_lat + s_rope) * scale
+    kp = jnp.arange(cc.shape[1])[None, None, None, :]
+    qp = (jnp.asarray(cache_pos).reshape(-1, 1)
+          + jnp.arange(S))[:, None, :, None]
+    s = jnp.where(kp <= qp, s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    # attention output in latent space, then up-project with W_uv
+    o_lat = jnp.einsum("bhst,btr->bshr", pr.astype(cc.dtype), cc)
+    w_uv = p["w_uv"].reshape(r, H, vd)
+    out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv)
+    out = out.reshape(B, S, H * vd) @ p["wo"]
+    return out, {"c_kv": cc, "k_rope": ck}
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}

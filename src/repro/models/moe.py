@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN — GShard-style grouped dispatch.
+
+Tokens are reshaped into groups of ``group_size``; each group dispatches
+independently into per-expert capacity buffers via one-hot einsums (the
+TPU-native pattern: everything is dense matmuls + all-to-all-able
+layouts; experts shard over the ``model``/``expert`` mesh axis).
+
+Capacity C = group_size · top_k / E · capacity_factor; overflow tokens
+are dropped (their combine weight is zero) — standard GShard semantics.
+A load-balancing auxiliary loss (Switch §2.2) is returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import activation, dense_init, dtype_of, plan_value, shard
+
+
+def moe_init(cfg: ModelConfig, key):
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff
+    dt = dtype_of(cfg)
+    E = m.num_experts
+    ks = jax.random.split(key, 5)
+
+    def expert_stack(k, shape):
+        return (jax.random.normal(k, shape) / jnp.sqrt(shape[-2])).astype(dt)
+
+    p = {"router": dense_init(ks[0], d, E, jnp.float32),
+         "w_up": expert_stack(ks[1], (E, d, f)),
+         "w_down": expert_stack(ks[2], (E, f, d))}
+    if cfg.gated_mlp:
+        p["w_gate"] = expert_stack(ks[3], (E, d, f))
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        p["shared_up"] = dense_init(ks[4], d, fs, dt)
+        p["shared_down"] = dense_init(ks[4], fs, d, dt)
+        if cfg.gated_mlp:
+            p["shared_gate"] = dense_init(ks[4], d, fs, dt)
+    return p
+
+
+def _expert_ffn(cfg: ModelConfig, p, xe: jax.Array) -> jax.Array:
+    """xe: (E, G*C, D) -> (E, G*C, D); batched over experts."""
+    up = jnp.einsum("egd,edf->egf", xe, p["w_up"])
+    if cfg.gated_mlp:
+        up = activation(cfg, jnp.einsum("egd,edf->egf", xe, p["w_gate"])) * up
+    else:
+        up = activation(cfg, up)
+    return jnp.einsum("egf,efd->egd", up, p["w_down"])
+
+
+def apply_moe(cfg: ModelConfig, p, x: jax.Array,
+              group_size: int = 1024) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D). Returns (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.experts_per_token
+    T = B * S
+    N = min(group_size, T)
+    G = T // N
+    xg = shard(x.reshape(G, N, D), "gnd")
+
+    # router matmul in compute dtype (logits upcast after): keeps any
+    # GSPMD resharding of xg in bf16 instead of f32 (2x the bytes)
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                   # (G,N,K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    import math as _math
+    C = min(max(_math.ceil(N * K / E * m.capacity_factor), 4), N * K)
+    # position of each (token, k) in its expert's buffer
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)     # (G,N,K,E)
+    pos_in_e = (jnp.cumsum(onehot.reshape(G, N * K, E), axis=1)
+                .reshape(G, N, K, E) - 1.0)
+    keep = (pos_in_e < C) & (onehot > 0)
+    pos = jnp.where(keep, pos_in_e, 0).astype(jnp.int32)
+    poh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # dispatch/combine tensors (G,N,E,C)
+    dispatch = jnp.einsum("gnke,gnkec->gnec", onehot, poh)
+    combine = jnp.einsum("gnk,gnke,gnkec->gnec",
+                         top_p.astype(jnp.float32), onehot, poh)
+    dispatch = shard(dispatch.astype(x.dtype), "gnec")
+    combine = shard(combine.astype(x.dtype), "gnec")
+
+    xe = jnp.einsum("gnec,gnd->egcd", dispatch, xg)          # (E,G,C,D)
+    xe = shard(xe.reshape(E, G * C, D), "egd")
+    ye = _expert_ffn(cfg, p, xe).reshape(E, G, C, D)
+    ye = shard(ye.reshape(E, G * C, D), "egd").reshape(E, G, C, D)
+    out = jnp.einsum("gnec,egcd->gnd", combine, ye)
+
+    if m.num_shared_experts:
+        up = xg @ p["shared_up"]
+        if cfg.gated_mlp:
+            up = activation(cfg, xg @ p["shared_gate"]) * up
+        else:
+            up = activation(cfg, up)
+        out = out + up @ p["shared_down"]
+
+    # Switch-style load balancing loss
+    frac_tokens = jnp.mean(onehot.sum(2), axis=1)            # (G,E)
+    frac_probs = jnp.mean(probs, axis=1)                     # (G,E)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, -1))
+    return out.reshape(B, S, D).astype(x.dtype), aux.astype(jnp.float32)

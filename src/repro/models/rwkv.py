@@ -1,0 +1,183 @@
+"""RWKV-6 (Finch) block — attention-free time-mixing with data-dependent
+decay [arXiv:2404.05892].
+
+Per head (dim hd), with receptance r_t, key k_t, value v_t, decay w_t
+(data-dependent, via a LoRA on the token-shifted input) and bonus u:
+
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+
+The jnp path below scans chunks sequentially and materializes the
+within-chunk contribution with a triangular einsum (the same chunked
+decomposition the Pallas kernel ``kernels/rwkv6`` implements in VMEM).
+Channel mixing is the standard RWKV squared-ReLU FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, dtype_of, shard
+
+
+def rwkv_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    r = cfg.rwkv.lora_w
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift mixing coefficients per projection
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt), "mu_g": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "w_r": dense_init(ks[0], d, d, dt),
+        "w_k": dense_init(ks[1], d, d, dt),
+        "w_v": dense_init(ks[2], d, d, dt),
+        "w_g": dense_init(ks[3], d, d, dt),
+        "w_o": dense_init(ks[4], d, d, dt),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_lora_a": dense_init(ks[5], d, r, dt),
+        "w_lora_b": dense_init(ks[6], r, d, dt, scale=0.01),
+        "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), jnp.float32),   # group-norm scale on output
+        # channel mix
+        "cm_mu": jnp.full((d,), 0.5, dt),
+        "cm_k": dense_init(ks[8], d, cfg.d_ff, dt),
+        "cm_v": dense_init(ks[9], cfg.d_ff, d, dt),
+        "cm_r": dense_init(ks[10], d, d, dt),
+    }
+    return p
+
+
+def _wkv_chunked(r, k, v, w, u, chunk: int, state0=None):
+    """r,k,v: (B,S,H,hd); w: (B,S,H,hd) decay in (0,1); u: (H,hd).
+    Returns (y, last_state (B,H,hd,hd))."""
+    # NOTE: deliberately NOT flattened under ROOFLINE_MODE — the chunk size
+    # defines the algorithm's true FLOPs (O(S·C·hd) per head); the inner
+    # scan undercount is <1% of the layer's projection FLOPs.
+    B, S, H, hd = r.shape
+    nchunks = max(S // chunk, 1)
+    chunk = S // nchunks
+    rc = r.reshape(B, nchunks, chunk, H, hd).swapaxes(0, 1)
+    kc = k.reshape(B, nchunks, chunk, H, hd).swapaxes(0, 1)
+    vc = v.reshape(B, nchunks, chunk, H, hd).swapaxes(0, 1)
+    wc = w.reshape(B, nchunks, chunk, H, hd).swapaxes(0, 1)
+
+    def body(S_in, args):
+        rcx, kcx, vcx, wcx = args                       # (B,C,H,hd)
+        C = rcx.shape[1]
+        logw = jnp.log(wcx)                             # (B,C,H,hd) < 0
+        cum = jnp.cumsum(logw, axis=1)                  # prod of decays ≤ t
+        cum_ex = cum - logw                             # sum up to t-1
+        # factorized pairwise decay (GEMM form, as in the Pallas kernel):
+        # A[t,s] = exp(cum_ex[t] - cum[s]) = (r·e^{cum_ex})·(k·e^{-cum})
+        r_hat = rcx * jnp.exp(cum_ex)                   # (B,C,H,hd)
+        k_hat = kcx * jnp.exp(-cum)
+        # inter-chunk: r_t · (decay(0..t-1) ⊙ S_in)
+        y_inter = jnp.einsum("bchd,bhde->bche", r_hat, S_in)
+        att = jnp.einsum("bchd,bshd->bcsh", r_hat, k_hat)
+        tri = jnp.tril(jnp.ones((C, C)), -1)[None, :, :, None]
+        att = att * tri
+        diag = jnp.einsum("bchd,hd,bchd->bch", rcx, u, kcx)
+        y_intra = jnp.einsum("bcsh,bshe->bche", att, vcx) \
+            + diag[..., None] * vcx
+        # state update: S_out = decay(all) S_in + sum_s decay(s+1..end) k v
+        dec_all = jnp.exp(cum[:, -1])                   # (B,H,hd)
+        dec_tail = jnp.exp(cum[:, -1][:, None] - cum)   # (B,C,H,hd)
+        S_out = dec_all[..., None] * S_in + jnp.einsum(
+            "bchd,bche->bhde", kcx * dec_tail, vcx)
+        return S_out, y_inter + y_intra
+
+    S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state0 is None
+          else state0)
+    S_last, ys = jax.lax.scan(body, S0, (rc.astype(jnp.float32),
+                                         kc.astype(jnp.float32),
+                                         vc.astype(jnp.float32),
+                                         wc.astype(jnp.float32)))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, hd)
+    return y, S_last
+
+
+def apply_rwkv_timemix(cfg: ModelConfig, p, x: jax.Array, *, cache=None,
+                       chunk: int = 64):
+    """x: (B,S,D). cache (decode): {"x_prev": (B,D), "S": (B,H,hd,hd)}.
+    Returns (out, new_cache)."""
+    B, S, D = x.shape
+    hd = cfg.rwkv.head_dim
+    H = D // hd
+    if cache is None:
+        x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], 1)
+    else:
+        x_prev = jnp.concatenate([cache["x_prev"][:, None], x[:, :-1]], 1)
+
+    def mix(mu):
+        return x * mu + x_prev * (1 - mu)
+
+    r = (mix(p["mu_r"]) @ p["w_r"]).reshape(B, S, H, hd)
+    k = (mix(p["mu_k"]) @ p["w_k"]).reshape(B, S, H, hd)
+    v = (mix(p["mu_v"]) @ p["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["w_g"])
+    xw = mix(p["mu_w"])
+    w_log = p["w0"] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+                       ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, H, hd)   # decay in (0,1)
+    r, k, v = shard(r, "bshd"), shard(k, "bshd"), shard(v, "bshd")
+
+    if cache is None:
+        y, S_last = _wkv_chunked(r, k, v, w, p["u"], chunk=chunk)
+        new_cache = None
+    elif S > 1:
+        # prefill-with-state: chunked form seeded from the cached state
+        # (NOT the per-token loop — that would trace S python iterations)
+        y, S_last = _wkv_chunked(r, k, v, w, p["u"], chunk=chunk,
+                                 state0=cache["S"])
+        new_cache = {"x_prev": x[:, -1], "S": S_last}
+    else:
+        St = cache["S"]
+        rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+        ys = []
+        for t in range(S):
+            kv = jnp.einsum("bhd,bhe->bhde", kf[:, t], vf[:, t])
+            y_t = jnp.einsum("bhd,bhde->bhe", rf[:, t],
+                             St + p["u"][..., None] * kv)
+            St = w[:, t].astype(jnp.float32)[..., None] * St + kv
+            ys.append(y_t)
+        y = jnp.stack(ys, 1)
+        new_cache = {"x_prev": x[:, -1], "S": St}
+
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, -1, keepdims=True)
+    var = jnp.var(yf, -1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yf.reshape(B, S, D) * p["ln_x"]).astype(x.dtype)
+    out = (y * g) @ p["w_o"]
+    return out, new_cache
+
+
+def apply_rwkv_channelmix(cfg: ModelConfig, p, x: jax.Array, *, cache=None):
+    """Squared-ReLU channel mixing. cache: {"x_prev": (B,D)}."""
+    B, S, D = x.shape
+    if cache is None:
+        x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], 1)
+        new_cache = None
+    else:
+        x_prev = jnp.concatenate([cache["x_prev"][:, None], x[:, :-1]], 1)
+        new_cache = {"x_prev": x[:, -1]}
+    xm = x * p["cm_mu"] + x_prev * (1 - p["cm_mu"])
+    kk = jnp.square(jax.nn.relu(xm @ p["cm_k"]))
+    kk = shard(kk, "btf")
+    rr = jax.nn.sigmoid(xm @ p["cm_r"])
+    return rr * (kk @ p["cm_v"]), new_cache
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, dtype):
+    hd = cfg.rwkv.head_dim
+    H = cfg.d_model // hd
+    return {"tm": {"x_prev": jnp.zeros((batch, cfg.d_model), dtype),
+                   "S": jnp.zeros((batch, H, hd, hd), jnp.float32)},
+            "cm": {"x_prev": jnp.zeros((batch, cfg.d_model), dtype)}}

@@ -1,0 +1,149 @@
+"""Mamba-1 selective SSM block (for Jamba's mamba layers).
+
+The recurrence h_t = exp(Δ_t·A) ⊙ h_{t-1} + Δ_t·B_t·x_t is evaluated as a
+composition of affine maps with ``jax.lax.associative_scan`` inside fixed
+chunks and a sequential carry across chunks (``jax.lax.scan``) — the
+TPU-friendly middle ground between a full parallel scan (memory ∝ S·N)
+and a step-wise loop (S sequential matmuls).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, dtype_of, shard
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def mamba_init(cfg: ModelConfig, key):
+    mb = cfg.mamba
+    d = cfg.d_model
+    di = d * mb.expand
+    N = mb.d_state
+    R = _dt_rank(cfg)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    A = -jnp.exp(jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))
+                 )[None, :].repeat(di, 0)                  # (di,N) real S4D init
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dt),          # x and gate z
+        "conv_w": (jax.random.normal(ks[1], (mb.d_conv, di)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "w_x": dense_init(ks[2], di, R + 2 * N, dt),       # Δ low-rank, B, C
+        "w_dt": dense_init(ks[3], R, di, dt),
+        "dt_bias": jnp.full((di,), math.log(math.e - 1), jnp.float32),
+        "A_log": jnp.log(-A),                              # (di,N) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, d, dt),
+    }
+
+
+def _ssm_scan_chunked(u, dt, Bm, Cm, A, chunk: int, h0=None):
+    """u,dt: (B,S,di); Bm,Cm: (B,S,N); A: (di,N). Returns (y, h_last).
+
+    Affine composition: (a2,b2)∘(a1,b1) = (a1·a2, a2·b1 + b2) with
+    a_t = exp(dt_t·A) (B,S,di,N) and b_t = dt_t·B_t·u_t.
+    """
+    from .layers import ROOFLINE_MODE
+    B, S, di = u.shape
+    N = A.shape[-1]
+    if ROOFLINE_MODE:
+        chunk = S  # flatten for cost accounting
+    nchunks = max(S // chunk, 1)
+    chunk = S // nchunks
+    a = jnp.exp(dt[..., None] * A)                         # (B,S,di,N)
+    b = (dt * u)[..., None] * Bm[:, :, None, :]            # (B,S,di,N)
+    a = a.reshape(B, nchunks, chunk, di, N).swapaxes(0, 1)
+    b = b.reshape(B, nchunks, chunk, di, N).swapaxes(0, 1)
+
+    def comb(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+
+    def body(h, ab):
+        ac, bc = ab                                        # (B,chunk,di,N)
+        a_cum, b_cum = jax.lax.associative_scan(comb, (ac, bc), axis=1)
+        hs = a_cum * h[:, None] + b_cum                    # states over chunk
+        return hs[:, -1], hs
+
+    h_init = (jnp.zeros((B, di, N), a.dtype) if h0 is None
+              else h0.astype(a.dtype))
+    h_last, hs = jax.lax.scan(body, h_init, (a, b))
+    hs = hs.swapaxes(0, 1).reshape(B, S, di, N)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm)
+    return y, h_last
+
+
+def apply_mamba(cfg: ModelConfig, p, x: jax.Array, *, cache=None):
+    """x: (B,S,D). cache (decode): {"conv": (B,d_conv-1,di), "h": (B,di,N)}.
+    Returns (out, new_cache)."""
+    mb = cfg.mamba
+    B, S, D = x.shape
+    di = D * mb.expand
+    N = mb.d_state
+    R = _dt_rank(cfg)
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                      # (B,S,di)
+    xi = shard(xi, "bsi")
+
+    # depthwise causal conv over seq
+    K = mb.d_conv
+    if cache is None:
+        pad = jnp.zeros((B, K - 1, di), xi.dtype)
+        conv_state = None
+    else:
+        pad = cache["conv"]
+        conv_state = jnp.concatenate([pad, xi], 1)[:, -(K - 1):]
+    xpad = jnp.concatenate([pad, xi], axis=1)              # (B,S+K-1,di)
+    idx = jnp.arange(S)[:, None] + jnp.arange(K)[None, :]
+    xc = jnp.einsum("bski,ki->bsi", xpad[:, idx.reshape(-1)].reshape(
+        B, S, K, di), p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["w_x"]                                   # (B,S,R+2N)
+    dt_lr, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_lr @ p["w_dt"]
+                         + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                               # (di,N)
+    if cache is None:
+        y, h_last = _ssm_scan_chunked(xc.astype(jnp.float32), dt,
+                                      Bm.astype(jnp.float32),
+                                      Cm.astype(jnp.float32), A,
+                                      chunk=mb.chunk)
+        new_cache = None
+    elif S > 1:
+        # prefill-with-state: chunked scan seeded from the cached state
+        y, h_last = _ssm_scan_chunked(xc.astype(jnp.float32), dt,
+                                      Bm.astype(jnp.float32),
+                                      Cm.astype(jnp.float32), A,
+                                      chunk=mb.chunk,
+                                      h0=cache["h"])
+        new_cache = {"conv": conv_state, "h": h_last}
+    else:
+        # decode: S small (usually 1) — step the recurrence directly
+        h = cache["h"].astype(jnp.float32)
+        ys = []
+        for t in range(S):
+            a_t = jnp.exp(dt[:, t, :, None] * A)
+            b_t = (dt[:, t] * xc[:, t].astype(jnp.float32))[..., None] \
+                * Bm[:, t, None, :].astype(jnp.float32)
+            h = a_t * h + b_t
+            ys.append(jnp.einsum("bdn,bn->bd", h,
+                                 Cm[:, t].astype(jnp.float32)))
+        y = jnp.stack(ys, axis=1)
+        new_cache = {"conv": conv_state, "h": h}
+    y = y + xc.astype(jnp.float32) * p["D"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, new_cache
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype):
+    mb = cfg.mamba
+    di = cfg.d_model * mb.expand
+    return {"conv": jnp.zeros((batch, mb.d_conv - 1, di), dtype),
+            "h": jnp.zeros((batch, di, mb.d_state), jnp.float32)}

@@ -1,0 +1,319 @@
+"""Model assembly: any ``ModelConfig`` → init / forward / loss / decode.
+
+Layers are grouped into *periods* (``cfg.block_pattern``); the stack of
+``cfg.num_periods`` identical periods runs under one ``jax.lax.scan`` with
+stacked parameters (small HLO even at 48 layers), preceded by explicit
+``prelude`` layers (e.g. DeepSeek's dense first layer). Heterogeneous
+periods (Jamba's mamba/attn/MoE mix, Gemma3's 5 local : 1 global) unroll
+*within* the period body.
+
+Decode threads per-layer caches through the same scan as xs/ys.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .moe import apply_moe, moe_init
+from .rwkv import (apply_rwkv_channelmix, apply_rwkv_timemix, rwkv_cache_init,
+                   rwkv_init)
+from .ssm import apply_mamba, mamba_cache_init, mamba_init
+
+
+# ----------------------------------------------------------------- blocks
+def _block_init(cfg: ModelConfig, kind: str, key):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": L.norm_init(cfg)}
+    if kind == "rwkv":
+        p["tm"] = rwkv_init(cfg, ks[0])
+        p["ln2"] = L.norm_init(cfg)
+        return p
+    if kind.startswith("mamba"):
+        p["mix"] = mamba_init(cfg, ks[0])
+    elif kind.startswith("mla"):
+        p["mix"] = L.mla_init(cfg, ks[0])
+    else:  # attn | swa
+        p["mix"] = L.gqa_init(cfg, ks[0])
+    p["ln2"] = L.norm_init(cfg)
+    if kind.endswith("moe"):
+        p["ffn"] = moe_init(cfg, ks[1])
+    else:
+        p["ffn"] = L.mlp_init(cfg, ks[1])
+    if cfg.post_norm:
+        p["pn1"] = L.norm_init(cfg)
+        p["pn2"] = L.norm_init(cfg)
+    return p
+
+
+def _block_apply(cfg: ModelConfig, kind: str, p, x, *, positions,
+                 cache=None, cache_pos=None):
+    """One layer. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(cfg, p["ln1"], x)
+    if kind == "rwkv":
+        tm_c = cache["tm"] if cache is not None else None
+        y, tm_new = apply_rwkv_timemix(cfg, p["tm"], h, cache=tm_c)
+        x = x + y
+        h2 = L.apply_norm(cfg, p["ln2"], x)
+        cm_c = cache["cm"] if cache is not None else None
+        y2, cm_new = apply_rwkv_channelmix(cfg, p["tm"], h2, cache=cm_c)
+        x = x + y2
+        new_cache = (None if cache is None else {"tm": tm_new, "cm": cm_new})
+        return x, new_cache, aux
+    if kind.startswith("mamba"):
+        y, mix_cache = apply_mamba(cfg, p["mix"], h, cache=cache and
+                                   cache.get("mix"))
+    elif kind.startswith("mla"):
+        y, mix_cache = L.apply_mla(cfg, p["mix"], h, positions=positions,
+                                   kv_cache=cache and cache.get("mix"),
+                                   cache_pos=cache_pos)
+    else:
+        is_global = not kind.startswith("swa")
+        y, mix_cache = L.apply_gqa(cfg, p["mix"], h, positions=positions,
+                                   is_global=is_global,
+                                   kv_cache=cache and cache.get("mix"),
+                                   cache_pos=cache_pos)
+    if cfg.post_norm:
+        y = L.apply_norm(cfg, p["pn1"], y)
+    x = x + y
+    h2 = L.apply_norm(cfg, p["ln2"], x)
+    if kind.endswith("moe"):
+        y2, aux = apply_moe(cfg, p["ffn"], h2)
+    else:
+        y2 = apply_mlp_dispatch(cfg, p["ffn"], h2)
+    if cfg.post_norm:
+        y2 = L.apply_norm(cfg, p["pn2"], y2)
+    x = x + y2
+    x = L.shard(x, "btd")
+    new_cache = None if cache is None else {"mix": mix_cache}
+    return x, new_cache, aux
+
+
+def apply_mlp_dispatch(cfg, p, x):
+    return L.apply_mlp(cfg, p, x)
+
+
+def _block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype):
+    if kind == "rwkv":
+        return rwkv_cache_init(cfg, batch, dtype)
+    if kind.startswith("mamba"):
+        return {"mix": mamba_cache_init(cfg, batch, dtype)}
+    if kind.startswith("mla"):
+        return {"mix": L.mla_cache_init(cfg, batch, max_len, dtype)}
+    return {"mix": L.gqa_cache_init(cfg, batch, max_len, dtype)}
+
+
+# ------------------------------------------------------------------ model
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4 + len(cfg.prelude))
+    params: dict[str, Any] = {}
+    params["embed"] = (jax.random.normal(ks[0],
+                                         (cfg.padded_vocab, cfg.d_model))
+                       * 0.02).astype(dt)
+    for i, kind in enumerate(cfg.prelude):
+        params[f"prelude{i}"] = _block_init(cfg, kind, ks[4 + i])
+
+    def one_period(k):
+        kks = jax.random.split(k, cfg.period)
+        return {f"b{i}": _block_init(cfg, kind, kks[i])
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    period_keys = jax.random.split(ks[1], cfg.num_periods)
+    params["periods"] = jax.vmap(one_period)(period_keys)
+    params["final_norm"] = L.norm_init(cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[2], cfg.d_model,
+                                         cfg.padded_vocab, dt)
+    return params
+
+
+def lm_head_weight(cfg: ModelConfig, params):
+    return (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+
+def mask_pad_logits(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    """Vocab-padding columns carry untrained weights: mask to -inf."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(valid, logits, -jnp.inf)
+
+
+def embed_inputs(cfg: ModelConfig, params, batch: dict) -> jax.Array:
+    if "embeds" in batch:
+        x = batch["embeds"].astype(L.dtype_of(cfg))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return L.shard(x, "btd")
+
+
+def forward(cfg: ModelConfig, params, x: jax.Array, *, positions,
+            caches=None, cache_pos=None, remat_policy: str | None = None):
+    """Backbone forward. Returns (hidden (B,S,D), new_caches, aux_loss)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prelude_caches = []
+    for i, kind in enumerate(cfg.prelude):
+        c = caches["prelude"][i] if caches is not None else None
+        x, nc, aux = _block_apply(cfg, kind, params[f"prelude{i}"], x,
+                                  positions=positions, cache=c,
+                                  cache_pos=cache_pos)
+        aux_total = aux_total + aux
+        new_prelude_caches.append(nc)
+
+    def period_body(carry, xs):
+        x, aux_acc = carry
+        if caches is not None:
+            pp, pc = xs
+        else:
+            pp, pc = xs, None
+        new_pc = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            c = pc[f"b{i}"] if pc is not None else None
+            x, nc, aux = _block_apply(cfg, kind, pp[f"b{i}"], x,
+                                      positions=positions, cache=c,
+                                      cache_pos=cache_pos)
+            aux_acc = aux_acc + aux
+            if nc is not None:
+                new_pc[f"b{i}"] = nc
+        return (x, aux_acc), (new_pc if new_pc else None)
+
+    body = period_body
+    if remat_policy and remat_policy != "none":
+        pol = {"full": None,
+               "dots": jax.checkpoint_policies.dots_saveable,
+               "dots_no_batch":
+                   jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+               }[remat_policy]
+        body = jax.checkpoint(period_body, policy=pol)
+
+    xs = (params["periods"], caches["periods"]) if caches is not None \
+        else params["periods"]
+    unroll = min(max(L.ROOFLINE_UNROLL, 1), max(cfg.num_periods, 1))
+    (x, aux_total), period_caches = jax.lax.scan(body, (x, aux_total), xs,
+                                                 unroll=unroll)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"prelude": new_prelude_caches,
+                      "periods": period_caches}
+    return x, new_caches, aux_total
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = L.dtype_of(cfg)
+    prelude = [_block_cache_init(cfg, kind, batch, max_len, dt)
+               for kind in cfg.prelude]
+
+    def one_period(_):
+        return {f"b{i}": _block_cache_init(cfg, kind, batch, max_len, dt)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    periods = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[one_period(i) for i in range(cfg.num_periods)]) \
+        if cfg.num_periods > 1 else jax.tree_util.tree_map(
+            lambda x: x[None], one_period(0))
+    return {"prelude": prelude, "periods": periods}
+
+
+# ------------------------------------------------------------------- loss
+def chunked_cross_entropy(cfg: ModelConfig, hidden: jax.Array,
+                          head_w: jax.Array, targets: jax.Array,
+                          chunk: int = 8192):
+    """Memory-safe LM loss: never materializes (B,S,V) logits. Flattens
+    tokens and scans vocab-projection + logsumexp over chunks."""
+    B, S, D = hidden.shape
+    T = B * S
+    h = hidden.reshape(T, D)
+    t = targets.reshape(T)
+    # chunk count: largest n <= T/chunk that divides T
+    n = max(T // chunk, 1)
+    if L.ROOFLINE_MODE:
+        n = 1  # flatten so cost analysis sees the full vocab projection
+    while T % n:
+        n -= 1
+    hc = h.reshape(n, T // n, D)
+    tc = t.reshape(n, T // n)
+
+    def body(acc, xs):
+        hx, tx = xs
+        logits = (hx @ head_w).astype(jnp.float32)       # (c, V)
+        logits = mask_pad_logits(cfg, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.clip(tx, 0)[:, None], axis=-1)[:, 0]
+        valid = (tx >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * valid
+        loss_sum, count = acc
+        return (loss_sum + jnp.sum(nll), count + jnp.sum(valid)), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, tc))
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict,
+            remat_policy: str | None = None):
+    """Training loss. batch: tokens/embeds (B,S[,D]) + targets (B,S)."""
+    x = embed_inputs(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hidden, _, aux = forward(cfg, params, x, positions=positions,
+                             remat_policy=remat_policy)
+    ce = chunked_cross_entropy(cfg, hidden, lm_head_weight(cfg, params),
+                               batch["targets"])
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    return ce + aux_w * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------- serving
+def prefill(cfg: ModelConfig, params, batch: dict, max_len: int):
+    """Run the prompt, fill caches. Returns (last_logits, caches)."""
+    x = embed_inputs(cfg, params, batch)
+    B, S = x.shape[:2]
+    caches = init_cache(cfg, B, max_len)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hidden, caches, _ = forward(cfg, params, x, positions=positions,
+                                caches=caches, cache_pos=0)
+    logits = (hidden[:, -1:] @ lm_head_weight(cfg, params)
+              ).astype(jnp.float32)
+    return mask_pad_logits(cfg, logits), caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens_or_embeds,
+                cache_pos):
+    """One autoregressive step. tokens: (B,1) int32 (or embeds (B,1,D)).
+    ``cache_pos``: int32 scalar — current length. Returns
+    (logits (B,1,V) fp32, new_caches)."""
+    if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
+        batch = {"tokens": tokens_or_embeds}
+    else:
+        batch = {"embeds": tokens_or_embeds}
+    x = embed_inputs(cfg, params, batch)
+    positions = (jnp.asarray(cache_pos).reshape(-1, 1)
+                 + jnp.arange(x.shape[1], dtype=jnp.int32))
+    hidden, caches, _ = forward(cfg, params, x, positions=positions,
+                                caches=caches, cache_pos=cache_pos)
+    logits = (hidden @ lm_head_weight(cfg, params)).astype(jnp.float32)
+    return mask_pad_logits(cfg, logits), caches
+
+
+def encoder_logits(cfg: ModelConfig, params, batch: dict):
+    """Encoder-only (HuBERT): full-sequence logits for masked prediction."""
+    x = embed_inputs(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hidden, _, _ = forward(cfg, params, x, positions=positions)
+    return mask_pad_logits(
+        cfg, (hidden @ lm_head_weight(cfg, params)).astype(jnp.float32))

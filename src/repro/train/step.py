@@ -1,0 +1,178 @@
+"""Step builders: sharded train_step / serve_step factories.
+
+These are used identically by the real training loop, the examples and
+the multi-pod dry-run (which calls ``.lower(...).compile()`` on the same
+jitted functions with ShapeDtypeStruct inputs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import (decode_step, encoder_logits, init_params,
+                          input_specs, loss_fn, prefill)
+from repro.models.io_spec import cache_spec, params_spec
+from repro.models.layers import activation_sharding
+from repro.sharding import rules
+from .optimizer import AdamWConfig, apply_updates, init_state
+
+
+@dataclass
+class BuiltStep:
+    fn: Any                      # jitted callable
+    in_shardings: Any
+    out_shardings: Any
+    params_sharding: Any
+    opt_sharding: Any = None
+    cache_sharding: Any = None
+    abstract_inputs: tuple = ()
+
+
+def _shardings(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     opt_cfg: AdamWConfig | None = None,
+                     remat_policy: str = "dots",
+                     donate: bool = True) -> BuiltStep:
+    opt_cfg = opt_cfg or AdamWConfig()
+    p_abs = params_spec(cfg)
+    pspecs = rules.param_specs(p_abs, mesh)
+    psh = _shardings(mesh, pspecs)
+    o_abs = jax.eval_shape(partial(init_state, opt_cfg), p_abs)
+
+    def opt_spec_tree(o_abs):
+        out = {}
+        for k, sub in o_abs.items():
+            if k == "count":
+                out[k] = P()
+            else:
+                out[k] = rules.zero1_specs(pspecs, p_abs, mesh)
+        return out
+
+    ospecs = opt_spec_tree(o_abs)
+    osh = _shardings(mesh, ospecs)
+    # ZeRO-sharded layout for the *bf16* params right after the update:
+    # forces XLA to cast master->bf16 BEFORE the ZeRO all-gather (measured:
+    # the gather otherwise moves f32 masters, 2x the bytes)
+    z1_param_sh = _shardings(mesh, rules.zero1_specs(pspecs, p_abs, mesh))
+    plan = rules.activation_plan(mesh, cfg, kind="train")
+
+    dp = rules.batch_axes(mesh)
+
+    def constrain_batch(b):
+        if not dp:
+            return b
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, *(None,) * (x.ndim - 1)))), b)
+
+    def train_step(params, opt_state, batch):
+        batch = constrain_batch(batch)
+        with activation_sharding(plan):
+            (loss, parts), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch, remat_policy=remat_policy),
+                has_aux=True)(params)
+            new_params, new_state, om = apply_updates(
+                opt_cfg, params, grads, opt_state)
+            new_params = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, new_params, z1_param_sh)
+        metrics = {"loss": loss, **parts, **om}
+        return new_params, new_state, metrics
+
+    met_sh = NamedSharding(mesh, P())
+    fn = jax.jit(
+        train_step,
+        in_shardings=(psh, osh, None),
+        out_shardings=(psh, osh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return BuiltStep(fn=fn, in_shardings=(psh, osh), out_shardings=(psh, osh),
+                     params_sharding=psh, opt_sharding=osh)
+
+
+def build_encoder_train_step(cfg: ModelConfig, mesh: Mesh,
+                             opt_cfg: AdamWConfig | None = None,
+                             remat_policy: str = "dots") -> BuiltStep:
+    """Encoder-only archs use the same loss (masked prediction == CE on
+    provided targets), so the standard builder applies."""
+    return build_train_step(cfg, mesh, opt_cfg, remat_policy)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, max_len: int
+                       ) -> BuiltStep:
+    p_abs = params_spec(cfg)
+    psh = _shardings(mesh, rules.param_specs(p_abs, mesh))
+    plan = rules.activation_plan(mesh, cfg, kind="prefill")
+
+    def prefill_step(params, batch):
+        with activation_sharding(plan):
+            if cfg.encoder_only:
+                return encoder_logits(cfg, params, batch), None
+            return prefill(cfg, params, batch, max_len)
+
+    fn = jax.jit(prefill_step, in_shardings=(psh, None))
+    return BuiltStep(fn=fn, in_shardings=(psh,), out_shardings=None,
+                     params_sharding=psh)
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                     donate: bool = True) -> BuiltStep:
+    """One-token decode with a seq_len KV cache (decode_* / long_* shapes)."""
+    long_context = shape.global_batch < rules_total_dp(mesh)
+    p_abs = params_spec(cfg)
+    psh = _shardings(mesh, rules.param_specs(p_abs, mesh))
+    c_abs = cache_spec(cfg, shape.global_batch, shape.seq_len)
+    csh = rules.cache_specs(mesh, c_abs, long_context=long_context)
+    tok_sh = rules.batch_specs(
+        mesh, jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        long_context=long_context)
+    plan = rules.activation_plan(
+        mesh, cfg, kind="decode_long" if long_context else "decode")
+
+    def serve_step(params, caches, tokens, cache_pos):
+        with activation_sharding(plan):
+            logits, new_caches = decode_step(cfg, params, caches, tokens,
+                                             cache_pos)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_caches
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(psh, csh, tok_sh, None),
+        out_shardings=(tok_sh, None, csh),
+        donate_argnums=(1,) if donate else (),
+    )
+    return BuiltStep(fn=fn, in_shardings=(psh, csh, tok_sh),
+                     out_shardings=None, params_sharding=psh,
+                     cache_sharding=csh)
+
+
+def rules_total_dp(mesh: Mesh) -> int:
+    import numpy as np
+    dp = rules.batch_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+
+def abstract_train_args(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                        opt_cfg: AdamWConfig | None = None):
+    """(params, opt_state, batch) as ShapeDtypeStructs for .lower()."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    p_abs = params_spec(cfg)
+    o_abs = jax.eval_shape(partial(init_state, opt_cfg), p_abs)
+    b_abs = input_specs(cfg, shape)["batch"]
+    return p_abs, o_abs, b_abs
+
+
+def abstract_serve_args(cfg: ModelConfig, shape: ShapeConfig):
+    spec = input_specs(cfg, shape)
+    return spec["caches"], spec["tokens"], spec["cache_pos"]

@@ -1,0 +1,10 @@
+"""Ensure the repo root (for `benchmarks.*`) is importable regardless of
+how pytest is invoked. NOTE: no XLA device-count flags here — smoke
+tests and benches must see 1 device; multi-device tests spawn
+subprocesses (tests/test_multidevice.py)."""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)

@@ -1,0 +1,76 @@
+"""Architecture configs: registration, published sizes, shape rules."""
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config, reduced,
+                           shape_skip_reason)
+
+
+def test_all_assigned_archs_registered():
+    assert len(ASSIGNED_ARCHS) == 10
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        assert cfg.validate() is cfg
+
+
+# published parameter counts (±18% tolerance for arch-detail approximations)
+PUBLISHED_PARAMS = {
+    "mixtral-8x7b": 46.7e9,
+    "deepseek-v2-lite-16b": 15.7e9,
+    "gemma3-1b": 1.0e9,
+    "starcoder2-7b": 7.2e9,
+    "granite-8b": 8.1e9,
+    "qwen2.5-14b": 14.7e9,
+    "rwkv6-7b": 7.6e9,
+    "internvl2-1b": 0.494e9,    # Qwen2-0.5B LM backbone (ViT stubbed)
+    "jamba-v0.1-52b": 52e9,
+    "hubert-xlarge": 0.96e9,
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_count_matches_published(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    ref = PUBLISHED_PARAMS[arch]
+    assert abs(n - ref) / ref < 0.18, f"{arch}: {n / 1e9:.2f}B vs {ref / 1e9}B"
+
+
+def test_active_params_less_than_total_for_moe():
+    for arch in ("mixtral-8x7b", "deepseek-v2-lite-16b", "jamba-v0.1-52b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < cfg.param_count()
+    cfg = get_config("granite-8b")
+    assert cfg.active_param_count() == cfg.param_count()
+
+
+def test_mixtral_active_params():
+    """Mixtral 8x7B: ~12.9B active per token (2 of 8 experts)."""
+    cfg = get_config("mixtral-8x7b")
+    assert abs(cfg.active_param_count() - 12.9e9) / 12.9e9 < 0.15
+
+
+def test_shape_skip_rules():
+    # encoder-only: no decode shapes
+    hubert = get_config("hubert-xlarge")
+    assert shape_skip_reason(hubert, SHAPES["decode_32k"])
+    assert shape_skip_reason(hubert, SHAPES["long_500k"])
+    assert shape_skip_reason(hubert, SHAPES["train_4k"]) is None
+    # long_500k: only sub-quadratic archs
+    for a in ("qwen2.5-14b", "granite-8b", "starcoder2-7b",
+              "deepseek-v2-lite-16b", "internvl2-1b"):
+        assert shape_skip_reason(get_config(a), SHAPES["long_500k"])
+    for a in ("rwkv6-7b", "jamba-v0.1-52b", "mixtral-8x7b", "gemma3-1b"):
+        assert shape_skip_reason(get_config(a), SHAPES["long_500k"]) is None
+    # 33 live cells out of 40 (DESIGN.md §4)
+    live = sum(1 for a in ASSIGNED_ARCHS for s in SHAPES.values()
+               if shape_skip_reason(get_config(a), s) is None)
+    assert live == 33
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_configs_are_valid_and_small(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.d_model <= 128
+    assert cfg.num_layers <= len(cfg.prelude) + 2 * cfg.period
+    assert cfg.num_heads % cfg.num_kv_heads == 0
+    cfg.validate()

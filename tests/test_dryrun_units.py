@@ -1,0 +1,72 @@
+"""Dry-run machinery units (no 512-device compile): HLO collective
+parser, roofline terms, model-FLOPs accounting, skip matrix."""
+import pytest
+
+from repro.launch.dryrun import (collective_bytes_from_hlo, model_flops,
+                                 roofline_terms)
+from repro.configs import SHAPES, get_config
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = bf16[128,4096]{1,0} parameter(0)
+  %ag = bf16[2048,4096]{1,0} all-gather(bf16[128,4096]{1,0} %p0), replica_groups=[16,16]<=[256]
+  %ar = f32[512,512]{1,0} all-reduce(f32[512,512]{1,0} %x), to_apply=%add
+  %ags = bf16[64,64]{1,0} all-gather-start(bf16[8,64]{1,0} %p1)
+  %agd = bf16[64,64]{1,0} all-gather-done(%ags)
+  %cp = bf16[32,32]{1,0} collective-permute(bf16[32,32]{1,0} %y), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_collective_parser_sums_operands_not_results():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    # all-gather operand: 128*4096*2 bytes; -start counted, -done skipped
+    assert out["bytes"]["all-gather"] == 128 * 4096 * 2 + 8 * 64 * 2
+    assert out["bytes"]["all-reduce"] == 512 * 512 * 4
+    assert out["bytes"]["collective-permute"] == 32 * 32 * 2
+    assert out["counts"]["all-gather"] == 2
+    assert out["total_bytes"] > 0
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops=197e12 * 256, hbm_bytes=0, coll_bytes=0,
+                       chips=256)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["dominant"] == "compute"
+    t = roofline_terms(flops=0, hbm_bytes=819e9 * 256 * 2, coll_bytes=0,
+                       chips=256)
+    assert t["dominant"] == "memory" and t["bound_s"] == pytest.approx(2.0)
+    t = roofline_terms(flops=0, hbm_bytes=0, coll_bytes=50e9 * 256 * 3,
+                       chips=256)
+    assert t["dominant"] == "collective"
+    assert t["bound_s"] == pytest.approx(3.0)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("granite-8b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    de = model_flops(cfg, SHAPES["decode_32k"])
+    tokens_train = 256 * 4096
+    assert tr == pytest.approx(6 * cfg.param_count() * tokens_train,
+                               rel=1e-6)
+    assert de == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("mixtral-8x7b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    assert tr < 6 * cfg.param_count() * 256 * 4096
+    assert tr == pytest.approx(
+        6 * cfg.active_param_count() * 256 * 4096, rel=1e-6)
+
+
+def test_attention_score_traffic_estimator():
+    from benchmarks.roofline import attention_score_traffic
+    # swa arch charges window, not full seq
+    swa = attention_score_traffic("mixtral-8x7b", "train_4k")
+    cfgm = get_config("mixtral-8x7b")
+    expect = (256 * cfgm.num_heads * 4096 *
+              min(cfgm.sliding_window, 4096) * 4.0 * 4.0 * 32)
+    assert swa == pytest.approx(expect)
+    # attention-free arch: zero
+    assert attention_score_traffic("rwkv6-7b", "train_4k") == 0.0

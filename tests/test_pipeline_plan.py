@@ -1,0 +1,77 @@
+"""ParDNN-PP planning (single-process parts; runtime exactness is covered
+by tests/test_multidevice.py on 4 host devices)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import CostGraph
+from repro.pipeline.pardnn_pp import (plan_stages, plan_stages_emulated,
+                                      stack_stage_params, uniform_plan)
+
+
+def test_plan_contiguous_and_complete():
+    plan = plan_stages([1.0] * 12, [1.0] * 12, 0.0, 4)
+    assert plan.boundaries[0][0] == 0
+    assert plan.boundaries[-1][1] == 12
+    for (s1, e1), (s2, e2) in zip(plan.boundaries, plan.boundaries[1:]):
+        assert e1 == s2
+
+
+def test_plan_respects_memory_cap():
+    costs = [1.0] * 8
+    mems = [10.0] * 8
+    plan = plan_stages(costs, mems, act_bytes=0.0, num_stages=4,
+                       mem_cap=30.0 / 0.9)
+    assert plan.feasible
+    assert all(m <= 30.0 + 1e-9 for m in plan.stage_mem)
+
+
+def test_plan_heavy_prelude_beats_uniform():
+    costs = [5.0, 5.0] + [1.0] * 14
+    plan = plan_stages(costs, [1.0] * 16, 0.0, 4)
+    ub = uniform_plan(16, 4)
+    ub_cost = max(sum(costs[s:e]) for s, e in ub)
+    assert plan.bottleneck < ub_cost
+
+
+def test_infeasible_memory_flagged():
+    plan = plan_stages([1.0] * 4, [100.0] * 4, 0.0, 2, mem_cap=50.0)
+    assert not plan.feasible
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=0.1, max_value=10.0), min_size=2,
+                max_size=40),
+       st.integers(min_value=1, max_value=8))
+def test_property_plan_bottleneck_bounds(costs, p):
+    plan = plan_stages(costs, [1.0] * len(costs), 0.0, p)
+    assert plan.bottleneck >= max(costs) - 1e-9
+    assert plan.bottleneck <= sum(costs) + 1e-9
+    # optimality vs uniform (binary search is optimal for contiguity)
+    ub = uniform_plan(len(costs), min(p, len(costs)))
+    ub_cost = max(sum(costs[s:e]) for s, e in ub if e > s)
+    assert plan.bottleneck <= ub_cost + 1e-9
+
+
+def test_stack_stage_params_padding():
+    import jax.numpy as jnp
+    W = jnp.arange(24.0).reshape(6, 2, 2)
+    sp, mask = stack_stage_params(W, [(0, 1), (1, 4), (4, 6)])
+    assert sp.shape == (3, 3, 2, 2)
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [[1, 0, 0], [1, 1, 1], [1, 1, 0]])
+    np.testing.assert_array_equal(sp[1][0], W[1])
+
+
+def test_emulated_pipeline_makespan():
+    """GPipe steady state: makespan ≈ (M + P − 1) · bottleneck."""
+    g = CostGraph()
+    for _ in range(8):
+        g.add_node(comp=1.0)
+    for i in range(7):
+        g.add_edge(i, i + 1)
+    g.finalize()
+    plan = plan_stages([1.0] * 8, [1.0] * 8, 0.0, 4)
+    mk = plan_stages_emulated(g, plan, num_micro=16)
+    ideal = (16 + 4 - 1) * plan.bottleneck
+    assert mk == pytest.approx(ideal, rel=0.25)

@@ -1,0 +1,153 @@
+"""Optimizer, data pipeline, checkpoint manager, train loop, compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, DataIterator, make_batch
+from repro.train.compression import (dequantize_int8, init_error_state,
+                                     quantize_int8)
+from repro.train.optimizer import (AdamWConfig, apply_updates, global_norm,
+                                   init_state, schedule)
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0, grad_clip=100.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_state(cfg, params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = apply_updates(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.2
+
+
+def test_grad_clip_applied():
+    cfg = AdamWConfig(grad_clip=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = init_state(cfg, params)
+    _, _, m = apply_updates(cfg, params, {"w": jnp.full(4, 100.0)}, state)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_nonfinite_step_skipped():
+    cfg = AdamWConfig(warmup_steps=0)
+    params = {"w": jnp.ones(4)}
+    state = init_state(cfg, params)
+    p2, s2, m = apply_updates(cfg, params, {"w": jnp.full(4, jnp.nan)},
+                              state)
+    assert int(m["skipped"]) == 1
+    np.testing.assert_array_equal(p2["w"], params["w"])
+    assert int(s2["count"]) == 0
+
+
+def test_lr_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(schedule(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+def test_master_weights_for_bf16():
+    cfg = AdamWConfig()
+    params = {"w": jnp.ones(4, jnp.bfloat16)}
+    state = init_state(cfg, params)
+    assert "master" in state
+    assert state["master"]["w"].dtype == jnp.float32
+
+
+# --------------------------------------------------------------------- data
+def test_data_deterministic_and_resumable():
+    dc = DataConfig(batch_size=4, seq_len=8, vocab_size=100, seed=7)
+    b5a = make_batch(dc, 5)
+    b5b = make_batch(dc, 5)
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    assert not np.array_equal(make_batch(dc, 6)["tokens"], b5a["tokens"])
+
+
+def test_data_targets_are_next_tokens():
+    dc = DataConfig(batch_size=2, seq_len=16, vocab_size=100, seed=1)
+    b = make_batch(dc, 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_data_iterator_prefetch():
+    dc = DataConfig(batch_size=2, seq_len=4, vocab_size=10, seed=0)
+    it = DataIterator(dc)
+    bs = [next(it) for _ in range(3)]
+    it.close()
+    for i, b in enumerate(bs):
+        np.testing.assert_array_equal(b["tokens"],
+                                      make_batch(dc, i)["tokens"])
+
+
+def test_data_embed_mode():
+    dc = DataConfig(batch_size=2, seq_len=4, vocab_size=10, embed_dim=8)
+    b = make_batch(dc, 0)
+    assert b["embeds"].shape == (2, 4, 8)
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as td:
+        ck = CheckpointManager(td, keep_last=2)
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+        for step in (10, 20, 30):
+            ck.save(step, tree, extra={"step": step})
+        assert ck.all_steps() == [20, 30]
+        restored, extra = ck.restore(tree)
+        assert extra["step"] == 30
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async_then_wait():
+    with tempfile.TemporaryDirectory() as td:
+        ck = CheckpointManager(td)
+        tree = {"w": jnp.ones(8)}
+        ck.save_async(5, tree)
+        ck.wait()
+        assert ck.latest_step() == 5
+
+
+def test_checkpoint_rejects_wrong_tree():
+    with tempfile.TemporaryDirectory() as td:
+        ck = CheckpointManager(td)
+        ck.save(1, {"a": jnp.ones(3)})
+        with pytest.raises(ValueError):
+            ck.restore({"a": jnp.ones(3), "b": jnp.ones(2)})
+        with pytest.raises(ValueError):
+            ck.restore({"a": jnp.ones(4)})
+
+
+def test_checkpoint_crash_leaves_no_corruption():
+    """A stale .tmp dir from a crashed save is ignored and cleaned."""
+    with tempfile.TemporaryDirectory() as td:
+        ck = CheckpointManager(td)
+        ck.save(1, {"a": jnp.ones(3)})
+        os.makedirs(os.path.join(td, "step_00000002.tmp"))
+        assert ck.latest_step() == 1
+        ck.save(3, {"a": jnp.ones(3)})  # triggers gc of tmp
+        assert not any(n.endswith(".tmp") for n in os.listdir(td))
+
+
+# -------------------------------------------------------------- compression
+def test_int8_quantize_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    q, s = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_state_shapes():
+    tree = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    e = init_error_state(tree)
+    assert e["w"].dtype == jnp.float32
+    assert e["w"].shape == (4, 4)

@@ -1,0 +1,57 @@
+"""Straggler watchdog + preemption behaviour of the train loop."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.train.loop import LoopConfig, TrainLoop
+
+
+def _fake_step(sleep_on: set):
+    calls = {"n": 0}
+
+    def step(params, opt_state, batch):
+        calls["n"] += 1
+        if calls["n"] in sleep_on:
+            time.sleep(0.25)
+        return params, opt_state, {"loss": jnp.float32(1.0),
+                                   "grad_norm": jnp.float32(1.0),
+                                   "skipped": 0}
+    return step
+
+
+def _loop(steps, sleep_on=(), factor=2.5):
+    dc = DataConfig(batch_size=1, seq_len=4, vocab_size=8, seed=0)
+    return TrainLoop(step_fn=_fake_step(set(sleep_on)), params={},
+                     opt_state={}, data=DataIterator(dc), ckpt=None,
+                     cfg=LoopConfig(total_steps=steps, log_every=1000,
+                                    straggler_factor=factor))
+
+
+def test_straggler_detected():
+    loop = _loop(20, sleep_on={15})
+    st = loop.run()
+    assert st.stragglers >= 1
+    assert st.step == 20  # the slow step does not kill the run
+
+
+def test_no_false_positives_on_uniform_steps():
+    loop = _loop(15)
+    st = loop.run()
+    assert st.stragglers == 0
+
+
+def test_preemption_via_stop_flag():
+    loop = _loop(1000)
+    orig = loop.step_fn
+
+    def step(params, opt_state, batch):
+        if loop.state.step >= 5:
+            loop._stop_requested = True  # what the SIGTERM handler sets
+        return orig(params, opt_state, batch)
+
+    loop.step_fn = step
+    st = loop.run()
+    assert st.preempted
+    assert 5 <= st.step < 20
