@@ -1,0 +1,119 @@
+"""Partitioner scaling: nodes/sec on synthetic 10k/50k/200k-node graphs.
+
+The paper's headline claim (§5.4.1) is that ParDNN partitions graphs of
+hundreds of thousands of operations "in seconds to few minutes"; this
+benchmark drives the whole pipeline (slice → map → refine → emulate →
+memory-track → knapsack) end-to-end at those sizes and reports wall time
+and nodes/sec per stage.
+
+Graphs: layered ``random_dag`` DAGs (the worst case for the batched
+frontier — no model structure to exploit) plus Table-3-shaped model
+graphs scaled to the target node count.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_partitioner_scale.py          # 10k/50k/200k
+    PYTHONPATH=src python benchmarks/bench_partitioner_scale.py --tiny   # CI smoke (~2k)
+    PYTHONPATH=src python benchmarks/bench_partitioner_scale.py --engine scalar
+
+Emits the repo's ``name,us_per_call,derived`` CSV contract; ``derived``
+is nodes/sec.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import PardnnOptions, pardnn_partition  # noqa: E402
+from repro.core.graph import CostGraph, random_dag      # noqa: E402
+from repro.core import modelgraphs as mg                # noqa: E402
+
+from common import emit  # noqa: E402
+
+
+def synthetic_cases(tiny: bool) -> dict:
+    """Graph generators keyed by case name."""
+    if tiny:
+        return {
+            "rand-2k": lambda: random_dag(2_000, avg_deg=2.5, seed=0,
+                                          frac_residual=0.05),
+            "trn-2k": lambda: mg.trn(layers=2, seq=16, heads=4, batch=1),
+        }
+    return {
+        "rand-10k": lambda: random_dag(10_000, avg_deg=2.5, seed=0,
+                                       frac_residual=0.05),
+        "rand-50k": lambda: random_dag(50_000, avg_deg=2.5, seed=1,
+                                       frac_residual=0.05),
+        "rand-200k": lambda: random_dag(200_000, avg_deg=2.5, seed=2,
+                                        frac_residual=0.05),
+        # Table-3-shaped model graphs (fork-join structure, ref/res nodes)
+        "trn-24l": lambda: mg.trn(layers=24, seq=64, heads=16, batch=1),
+        "word-rnn": lambda: mg.word_rnn(layers=8, seq=28, batch=16),
+    }
+
+
+def run(tiny: bool = False, k: int = 8, engine: str | None = None,
+        with_caps: bool = True) -> dict:
+    results: dict = {}
+    opts = PardnnOptions(engine=engine)
+    for name, gen in synthetic_cases(tiny).items():
+        t0 = time.perf_counter()
+        g = gen()
+        t_build = time.perf_counter() - t0
+        caps = None
+        if with_caps:
+            # pressure the knapsack: cap at ~85% of the unconstrained peak
+            probe = pardnn_partition(g, k, options=opts)
+            caps = float(np.max(probe.peak_mem)) * 0.85 / 0.9
+        t0 = time.perf_counter()
+        p = pardnn_partition(g, k, mem_caps=caps, options=opts)
+        dt = time.perf_counter() - t0
+        nps = g.n / dt
+        emit(f"scale/{name}/n{g.n}", dt * 1e6, f"{nps:,.0f}_nodes_per_sec")
+        for stage in ("slice_s", "map_s", "refine_s", "step2_s"):
+            emit(f"scale/{name}/{stage}", p.stats[stage] * 1e6,
+                 f"{p.stats[stage] / max(p.stats['total_s'], 1e-12):.0%}")
+        results[name] = {
+            "n": g.n, "edges": g.num_edges, "seconds": dt,
+            "nodes_per_sec": nps, "build_s": t_build,
+            "makespan": p.makespan, "feasible": p.feasible,
+            "moved": p.moved_nodes, "stats": p.stats,
+        }
+    return results
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke run (~2k-node graphs)")
+    ap.add_argument("-k", type=int, default=8, help="device count")
+    ap.add_argument("--engine", choices=("vector", "scalar"), default=None,
+                    help="Step-2 engine (default: vector)")
+    ap.add_argument("--no-caps", action="store_true",
+                    help="skip the memory-capped (knapsack) pass")
+    ap.add_argument("--budget", type=float, default=120.0,
+                    help="fail if any single partition exceeds this many "
+                         "seconds (0 disables)")
+    args = ap.parse_args(argv)
+
+    results = run(tiny=args.tiny, k=args.k, engine=args.engine,
+                  with_caps=not args.no_caps)
+    worst = max(r["seconds"] for r in results.values())
+    total_nodes = sum(r["n"] for r in results.values())
+    print(f"# {len(results)} graphs, {total_nodes:,} nodes total, "
+          f"worst case {worst:.1f}s")
+    if args.budget and worst > args.budget:
+        print(f"# FAIL: worst case {worst:.1f}s exceeds budget "
+              f"{args.budget:.0f}s", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

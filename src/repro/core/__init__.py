@@ -1,8 +1,12 @@
 """ParDNN core: the paper's computational-graph partitioning algorithm."""
 from .costmodel import DeviceModel, TPU_V5E, V100
-from .emulator import Schedule, emulate
+from .emulator import (Schedule, emulate, emulate_scalar, emulate_vectorized,
+                       resolve_engine)
+from .fenwick import Fenwick, MaxPrefixTree
 from .graph import CostGraph, Placement, random_dag, NORMAL, RESIDUAL, REF
-from .memops import MemoryProfile, compute_profile, memory_potentials
+from .memops import (IncrementalMemoryTracker, MemoryProfile, compute_profile,
+                     compute_profile_scalar, compute_profile_vectorized,
+                     memory_potentials)
 from .partitioner import PardnnOptions, pardnn_partition
 from .slicing import Slicing, slice_graph
 from .mapping import Mapping, map_clusters, glb_map
@@ -10,8 +14,11 @@ from .mapping import Mapping, map_clusters, glb_map
 __all__ = [
     "CostGraph", "Placement", "random_dag", "NORMAL", "RESIDUAL", "REF",
     "DeviceModel", "TPU_V5E", "V100",
-    "Schedule", "emulate",
-    "MemoryProfile", "compute_profile", "memory_potentials",
+    "Schedule", "emulate", "emulate_scalar", "emulate_vectorized",
+    "resolve_engine", "Fenwick", "MaxPrefixTree",
+    "MemoryProfile", "compute_profile", "compute_profile_scalar",
+    "compute_profile_vectorized", "memory_potentials",
+    "IncrementalMemoryTracker",
     "PardnnOptions", "pardnn_partition",
     "Slicing", "slice_graph", "Mapping", "map_clusters", "glb_map",
 ]

@@ -1,7 +1,11 @@
 """Unit + property tests for the ParDNN core algorithm."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (CostGraph, NORMAL, RESIDUAL, PardnnOptions, emulate,
                         compute_profile, pardnn_partition, random_dag,

@@ -2,7 +2,11 @@
 by tests/test_multidevice.py on 4 host devices)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.graph import CostGraph
 from repro.pipeline.pardnn_pp import (plan_stages, plan_stages_emulated,
