@@ -10,39 +10,10 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs import get_config
-from repro.pipeline.pardnn_pp import plan_stages, uniform_plan
+from repro.pipeline.pardnn_pp import (layer_flops,  # canonical home
+                                      plan_stages, uniform_plan)
 
 from .common import emit, timer
-
-
-def layer_flops(cfg, kind: str, tokens: float, seq: int = 4096) -> float:
-    """Per-layer forward FLOPs at `tokens` tokens (coarse analytic)."""
-    D = cfg.d_model
-    f = 0.0
-    if kind.startswith(("attn", "swa")):
-        f += 2 * tokens * D * (2 * cfg.q_dim + 2 * cfg.kv_dim)
-        kv_eff = (min(cfg.sliding_window, seq) if kind.startswith("swa")
-                  else seq / 2)          # causal average vs window
-        f += 4 * tokens * kv_eff * cfg.head_dim * cfg.num_heads
-    elif kind.startswith("mla"):
-        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
-        f += 2 * tokens * D * (cfg.num_heads * qk + cfg.kv_lora_rank * 4)
-    elif kind.startswith("mamba"):
-        di = D * cfg.mamba.expand
-        f += 2 * tokens * D * 2 * di + 2 * tokens * di * D
-        f += 6 * tokens * di * cfg.mamba.d_state
-    elif kind == "rwkv":
-        f += 2 * tokens * D * 4 * D
-    if kind.endswith("moe"):
-        m = cfg.moe
-        f += 2 * tokens * m.experts_per_token * 3 * D * m.d_ff
-        f += 2 * tokens * (3 if cfg.gated_mlp else 2) * D * m.d_ff \
-            * m.num_shared_experts
-    elif not kind.startswith("rwkv"):
-        f += 2 * tokens * (3 if cfg.gated_mlp else 2) * D * cfg.d_ff
-    else:
-        f += 2 * tokens * 2 * D * cfg.d_ff
-    return f
 
 
 def run(full: bool = False, stage_counts=(4, 6, 8)) -> dict:

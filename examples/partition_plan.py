@@ -1,26 +1,24 @@
-"""Produce a ParDNN placement for an assigned architecture — the paper's
-Figure-1 output ("a single file containing the operation placement").
+"""Produce a ParDNN plan artifact for an assigned architecture — the
+paper's Figure-1 output ("a single file containing the operation
+placement"), as a versioned ``PartitionPlan``.
 
-Traces the arch's (reduced) training step to a jaxpr cost graph, runs
-ParDNN under per-device memory caps, and writes placement + pipeline
-stage plan JSON.
+Traces the arch's (reduced) training step through the ``repro`` facade,
+partitions under per-device memory caps, attaches the ParDNN-PP stage
+plan for the FULL config's layer chain, and saves the artifact (JSON
+header + npz assignment) — reloadable with
+``repro.PartitionPlan.load(path, traced=...)``.
 
     PYTHONPATH=src python examples/partition_plan.py --arch jamba-v0.1-52b \
         --devices 4 --out /tmp/placement.json
 """
 import argparse
-import json
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+import repro
 from repro.configs import get_config, reduced
-from repro.core import pardnn_partition
-from repro.core.tracing import trace_cost_graph
-from repro.models import init_params, loss_fn
-from repro.pipeline.pardnn_pp import plan_stages
-from benchmarks.bench_pipeline_plan import layer_flops
+from repro.models import init_params, loss_fn, smoke_batch
+from repro.pipeline.pardnn_pp import config_stage_plan
 
 
 def main():
@@ -34,42 +32,35 @@ def main():
     full = get_config(args.arch)
     cfg = reduced(full)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    B, S = 2, 32
-    if cfg.frontend is not None:
-        batch = {"embeds": jnp.zeros((B, S, cfg.d_model)),
-                 "targets": jnp.zeros((B, S), jnp.int32)}
-    else:
-        batch = {"tokens": jnp.zeros((B, S), jnp.int32),
-                 "targets": jnp.zeros((B, S), jnp.int32)}
+    batch = smoke_batch(cfg)
 
-    g = trace_cost_graph(lambda p: loss_fn(cfg, p, batch)[0], params)
-    print(f"traced {args.arch} (reduced): {g.n} ops, {g.num_edges} deps")
+    traced = repro.trace(lambda p: loss_fn(cfg, p, batch)[0], params)
+    print(f"traced {args.arch} (reduced): {traced.n} ops, "
+          f"{traced.graph.num_edges} deps, "
+          f"fingerprint {traced.fingerprint[:16]}…")
+
     caps = args.mem_cap_mb * 1e6 if args.mem_cap_mb else None
-    p = pardnn_partition(g, args.devices, mem_caps=caps)
-    print(f"makespan {p.makespan * 1e3:.3f} ms, feasible={p.feasible}, "
-          f"moved={p.moved_nodes}, loads={np.round(p.loads(g) * 1e3, 2)}")
+    plan = repro.partition(
+        traced, devices=args.devices, memory=caps,
+        meta={"arch": args.arch, "config": "reduced"},
+        progress=lambda stage, info: print(f"  [{stage}] {info}"))
+    print(plan.summary())
+    print(f"vs baselines: {plan.compare(['rr'])}")
 
-    # ParDNN-PP plan for the FULL config's layer chain
-    kinds = list(full.prelude) + list(full.block_pattern) * full.num_periods
-    costs = [layer_flops(full, k, 1e6) for k in kinds]
-    plan = plan_stages(costs, [full.param_count() / full.num_layers * 2] *
-                       len(costs), act_bytes=1e8,
-                       num_stages=args.devices, mem_cap=None)
-    placement = {
-        "arch": args.arch,
-        "devices": args.devices,
-        "op_placement": {g.names[i] + f"#{i}": int(p.assignment[i])
-                         for i in range(g.n)},
-        "makespan_s": p.makespan,
-        "feasible": p.feasible,
-        "pipeline_plan": {"boundaries": plan.boundaries,
-                          "bottleneck_flops": plan.bottleneck,
-                          "layers_per_stage": plan.layers_per_stage},
+    # ParDNN-PP plan for the FULL config's layer chain, riding in the
+    # plan's metadata so one artifact carries both placement levels
+    sp = config_stage_plan(full, num_stages=args.devices)
+    plan.meta["pipeline_plan"] = {
+        "boundaries": sp.boundaries,
+        "bottleneck_flops": sp.bottleneck,
+        "layers_per_stage": sp.layers_per_stage,
     }
-    with open(args.out, "w") as f:
-        json.dump(placement, f, indent=1)
-    print(f"wrote {args.out} ({len(placement['op_placement'])} op entries; "
-          f"PP stages {plan.layers_per_stage})")
+
+    plan.save(args.out)
+    # prove the artifact round-trips against this very trace
+    repro.PartitionPlan.load(args.out, traced=traced)
+    print(f"wrote {args.out} ({plan.n} op entries; "
+          f"PP stages {sp.layers_per_stage}); reload+validate OK")
 
 
 if __name__ == "__main__":

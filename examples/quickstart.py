@@ -1,16 +1,20 @@
-"""Quickstart: partition a DNN computational graph with ParDNN.
+"""Quickstart: trace → partition → plan — the ``repro`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. Build a Transformer training graph (the paper's TRN, scaled down).
-2. Step-1: slice -> LALB map -> refine (minimize makespan).
-3. Step-2: enforce per-device memory caps (knapsack moves).
-4. Compare against round-robin and inspect the schedule.
+2. ``repro.partition`` → a :class:`PartitionPlan` (Step-1 slicing/LALB/
+   refinement minimizing makespan).
+3. Re-partition under per-device memory caps (Step-2 knapsack moves).
+4. Save the plan artifact, reload it, compare against baselines.
 """
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import PardnnOptions, pardnn_partition, emulate
-from repro.core.baselines import round_robin
+import repro
+from repro.core import emulate
 from repro.core.modelgraphs import trn
 
 
@@ -20,34 +24,41 @@ def main():
     print(f"graph: {g.n} nodes, {g.num_edges} edges, CCR={g.ccr():.2f}")
 
     # --- unconstrained: minimize makespan --------------------------------
-    p = pardnn_partition(g, k)
-    rr = round_robin(g, k)
-    print(f"\nParDNN makespan : {p.makespan * 1e3:.3f} ms")
-    print(f"RoundRobin      : {rr.makespan * 1e3:.3f} ms "
-          f"({rr.makespan / p.makespan:.2f}x slower)")
-    print(f"loads: {np.round(p.loads(g) * 1e3, 2)} ms")
-    print(f"peak memory/device: "
-          f"{[f'{m / 1e6:.0f}MB' for m in p.peak_mem]}")
+    plan = repro.partition(g, devices=k)
+    print(f"\n{plan.summary()}")
+    cmp = plan.compare(["rr"])
+    print(f"RoundRobin      : {cmp['rr']['makespan_s'] * 1e3:.3f} ms "
+          f"({cmp['rr']['speedup']:.2f}x slower)")
 
     # --- memory-constrained ----------------------------------------------
-    cap = float(np.max(p.peak_mem)) * 0.7
-    p2 = pardnn_partition(g, k, mem_caps=cap / 0.9)
-    print(f"\nwith {cap / 1e6:.0f}MB caps: feasible={p2.feasible}, "
-          f"moved {p2.moved_nodes} nodes, "
-          f"makespan {p2.makespan * 1e3:.3f} ms "
-          f"(+{(p2.makespan / p.makespan - 1) * 100:.0f}%)")
-    print(f"peaks now: {[f'{m / 1e6:.0f}MB' for m in p2.peak_mem]}")
+    cap = float(np.max(plan.peak_mem)) * 0.7
+    plan2 = repro.partition(g, devices=k, memory=cap / 0.9)
+    r = plan2.report
+    print(f"\nwith {cap / 1e6:.0f}MB caps: feasible={r.feasible}, "
+          f"moved {r.moved_nodes} nodes, "
+          f"makespan {r.makespan_s * 1e3:.3f} ms "
+          f"(+{(r.makespan_s / plan.makespan - 1) * 100:.0f}%)")
+    print(f"peaks now: {[f'{m / 1e6:.0f}MB' for m in r.peak_mem_bytes]}")
+
+    # --- the durable artifact --------------------------------------------
+    with tempfile.TemporaryDirectory() as td:
+        path = plan2.save(os.path.join(td, "trn.plan.json"))
+        loaded = repro.PartitionPlan.load(path, graph=g)
+        assert np.array_equal(loaded.assignment, plan2.assignment)
+        print(f"\nplan artifact: saved + reloaded "
+              f"(schema v{loaded.schema_version}, "
+              f"fingerprint {loaded.fingerprint[:16]}…)")
 
     # --- the schedule the memory model is built on ------------------------
-    sched = emulate(g, p2.assignment, k)
-    print(f"\nemulated schedule: makespan {sched.makespan * 1e3:.3f} ms, "
+    sched = emulate(g, plan2.assignment, k)
+    print(f"emulated schedule: makespan {sched.makespan * 1e3:.3f} ms, "
           f"device busy fractions "
           f"{np.round(sched.pe_busy / sched.makespan, 2)}")
-    print(f"partition stats: {p2.stats['total_s'] * 1e3:.0f} ms total "
-          f"(slice {p2.stats['slice_s'] * 1e3:.0f} / map "
-          f"{p2.stats['map_s'] * 1e3:.0f} / refine "
-          f"{p2.stats['refine_s'] * 1e3:.0f} / step2 "
-          f"{p2.stats['step2_s'] * 1e3:.0f})")
+    t = r.stage_seconds
+    print(f"partition stats: {t['total_s'] * 1e3:.0f} ms total "
+          f"(slice {t['slice_s'] * 1e3:.0f} / map {t['map_s'] * 1e3:.0f} "
+          f"/ refine {t['refine_s'] * 1e3:.0f} "
+          f"/ step2 {t['step2_s'] * 1e3:.0f})")
 
 
 if __name__ == "__main__":

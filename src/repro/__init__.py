@@ -1,0 +1,33 @@
+"""repro — ParDNN computational-graph partitioning, grown into a JAX stack.
+
+The supported user surface is plan-centric (see ``repro/api.py``):
+
+    import repro
+
+    traced = repro.trace(fn, *example_args, record=True)
+    plan = repro.partition(traced, devices=8, memory=16e9)
+    plan.save("step.plan.json"); plan.execute(*args)
+
+Submodules (``repro.core``, ``repro.pipeline``, …) remain importable
+directly; attribute access on the package resolves lazily so that
+``import repro.configs`` does not drag in the tracer or jax-heavy code.
+"""
+_API = ("trace", "partition", "TracedModel", "DeviceSpec", "PartitionPlan",
+        "PlanReport", "PlanValidationError", "PardnnOptions",
+        "PLAN_SCHEMA_VERSION")
+
+__all__ = list(_API) + ["api"]
+
+
+def __getattr__(name):
+    # NB: must not use `from . import api` here — _handle_fromlist probes
+    # the attribute with hasattr first, which would re-enter __getattr__
+    if name == "api" or name in _API:
+        import importlib
+        api = importlib.import_module(".api", __name__)
+        return api if name == "api" else getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

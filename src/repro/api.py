@@ -1,0 +1,473 @@
+"""Plan-centric facade — the repo's top-level user surface.
+
+The paper's Figure-1 contract is a *single placement artifact* produced
+ahead of time and consumed by an execution engine. This module is that
+contract made concrete:
+
+    import repro
+
+    traced = repro.trace(step_fn, params, batch, record=True)
+    plan = repro.partition(traced, devices=8, memory=16e9)
+    plan.save("step.plan.json")          # JSON header + npz assignment
+    ...
+    plan = repro.PartitionPlan.load("step.plan.json", traced=traced)
+    out = plan.execute(params, batch)    # op-level model parallelism
+
+``trace`` always returns a :class:`TracedModel` (no tuple-vs-graph
+return split); ``partition`` always returns a :class:`PartitionPlan`
+whose :class:`PlanReport` captures per-stage timings and counters. Plans
+are versioned (``PLAN_SCHEMA_VERSION``) and carry the cost graph's
+content fingerprint, so a stale plan can never be silently applied to a
+model it was not computed for.
+
+The underlying engine (``core.tracing.trace_cost_graph``,
+``core.partitioner.pardnn_partition``) is unchanged and remains public —
+this facade packages it, it does not fork it.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from .core.costmodel import DeviceModel, TPU_V5E
+from .core.executor import TracedProgram, execute as _execute
+from .core.graph import CostGraph, Placement
+from .core.partitioner import PardnnOptions, pardnn_partition
+from .core.tracing import trace_cost_graph
+
+PLAN_FORMAT = "repro-partition-plan"
+PLAN_SCHEMA_VERSION = 1
+KNOWN_SCHEMA_VERSIONS = (1,)
+
+
+class PlanValidationError(ValueError):
+    """A plan artifact failed schema/fingerprint/integrity validation."""
+
+
+def _jsonable(x):
+    """Recursively convert numpy scalars/arrays and tuples so the value
+    round-trips through JSON *unchanged* (tuples become lists up front,
+    matching what json.load hands back)."""
+    if isinstance(x, Mapping):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.ndarray):
+        return [_jsonable(v) for v in x.tolist()]
+    if isinstance(x, (np.bool_, bool)):
+        return bool(x)
+    if isinstance(x, (np.integer, int)):
+        return int(x)
+    if isinstance(x, (np.floating, float)):
+        return float(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# devices
+# ---------------------------------------------------------------------------
+@dataclass
+class DeviceSpec:
+    """Target devices for a partition.
+
+    Attributes:
+        count: Number of (homogeneous) devices K.
+        memory: Per-device capacity in bytes — scalar, length-K sequence,
+            or None (no Step-2 memory enforcement).
+        jax_devices: Concrete jax devices for :meth:`PartitionPlan.execute`
+            (defaults to ``jax.devices()`` at execution time).
+    """
+    count: int
+    memory: float | Sequence[float] | None = None
+    jax_devices: list | None = None
+
+    @classmethod
+    def resolve(cls, devices, memory=None) -> "DeviceSpec":
+        if isinstance(devices, DeviceSpec):
+            if memory is not None and devices.memory is None:
+                return cls(devices.count, memory, devices.jax_devices)
+            return devices
+        if isinstance(devices, (int, np.integer)):
+            return cls(int(devices), memory)
+        # a concrete list of jax devices
+        devs = list(devices)
+        return cls(len(devs), memory, devs)
+
+    def mem_caps(self) -> np.ndarray | float | None:
+        if self.memory is None:
+            return None
+        if np.isscalar(self.memory):
+            return float(self.memory)
+        return np.asarray(self.memory, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+@dataclass
+class TracedModel:
+    """A traced computation: cost graph + optional executable program.
+
+    Returned by :func:`trace` regardless of ``record`` — the program is
+    simply None when not recorded, killing the tuple-vs-graph return
+    split of ``trace_cost_graph``.
+    """
+    graph: CostGraph
+    program: TracedProgram | None
+    fingerprint: str
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+
+def trace(fn: Callable, *example_args, record: bool = False,
+          dev: DeviceModel = TPU_V5E, max_scan_unroll: int = 64,
+          params_residual: bool = True, **example_kwargs) -> TracedModel:
+    """Trace ``fn(*example_args)`` into a :class:`TracedModel`.
+
+    With ``record=True`` the node-level program is captured as well, so
+    the resulting plan can :meth:`~PartitionPlan.execute` on real
+    devices. The graph fingerprint is computed here once and reused for
+    every plan produced from this trace.
+    """
+    res = trace_cost_graph(fn, *example_args, dev=dev,
+                           max_scan_unroll=max_scan_unroll,
+                           params_residual=params_residual,
+                           record=record, **example_kwargs)
+    g, prog = res if record else (res, None)
+    return TracedModel(graph=g, program=prog, fingerprint=g.fingerprint())
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+@dataclass
+class PlanReport:
+    """Structured account of how a plan was produced and what it costs.
+
+    ``stage_seconds`` holds the per-stage wall times (slice / map /
+    refine / step2 / total); ``counters`` the mapping, refinement and
+    Step-2 movement counters from the partitioner. All values are plain
+    JSON types so the report serializes losslessly inside the plan
+    header.
+    """
+    makespan_s: float
+    peak_mem_bytes: list
+    feasible: bool
+    moved_nodes: int
+    stage_seconds: dict = field(default_factory=dict)
+    counters: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"makespan_s": self.makespan_s,
+                "peak_mem_bytes": self.peak_mem_bytes,
+                "feasible": self.feasible,
+                "moved_nodes": self.moved_nodes,
+                "stage_seconds": self.stage_seconds,
+                "counters": self.counters}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanReport":
+        return cls(makespan_s=float(d["makespan_s"]),
+                   peak_mem_bytes=list(d["peak_mem_bytes"]),
+                   feasible=bool(d["feasible"]),
+                   moved_nodes=int(d["moved_nodes"]),
+                   stage_seconds=dict(d.get("stage_seconds", {})),
+                   counters=dict(d.get("counters", {})))
+
+    @classmethod
+    def from_placement(cls, p: Placement) -> "PlanReport":
+        timing_keys = ("slice_s", "map_s", "refine_s", "step2_s", "total_s")
+        stage_seconds = {k: float(p.stats[k]) for k in timing_keys
+                         if k in p.stats}
+        counters = _jsonable({k: v for k, v in p.stats.items()
+                              if k not in timing_keys})
+        peaks = [] if p.peak_mem is None else \
+            [float(x) for x in np.asarray(p.peak_mem)]
+        return cls(makespan_s=float(p.makespan), peak_mem_bytes=peaks,
+                   feasible=bool(p.feasible), moved_nodes=int(p.moved_nodes),
+                   stage_seconds=stage_seconds, counters=counters)
+
+
+# ---------------------------------------------------------------------------
+# the plan artifact
+# ---------------------------------------------------------------------------
+def _npz_path(path: str) -> str:
+    stem, ext = os.path.splitext(path)
+    return (stem if ext.lower() in (".json", ".plan") else path) + ".npz"
+
+
+@dataclass
+class PartitionPlan:
+    """The durable placement artifact (the paper's "single file").
+
+    Produced by :func:`partition`; persisted by :meth:`save` as a JSON
+    header (schema version, graph fingerprint, report, metadata) plus an
+    npz payload (assignment, per-device peaks, op names); reloaded by
+    :meth:`load` with schema and fingerprint validation. Bind a fresh
+    trace with :meth:`bind` to :meth:`execute` a loaded plan.
+    """
+    assignment: np.ndarray                # int64, node -> device
+    k: int
+    fingerprint: str
+    report: PlanReport
+    devices: DeviceSpec | None = None
+    meta: dict = field(default_factory=dict)
+    names: np.ndarray | None = None       # per-node op names (optional)
+    schema_version: int = PLAN_SCHEMA_VERSION
+    traced: TracedModel | None = None     # not serialized
+
+    # -- convenience views --------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.assignment.shape[0])
+
+    @property
+    def makespan(self) -> float:
+        return self.report.makespan_s
+
+    @property
+    def peak_mem(self) -> np.ndarray:
+        return np.asarray(self.report.peak_mem_bytes, dtype=np.float64)
+
+    @property
+    def feasible(self) -> bool:
+        return self.report.feasible
+
+    def summary(self) -> str:
+        r = self.report
+        peaks = ", ".join(f"{m / 1e6:.0f}MB" for m in r.peak_mem_bytes)
+        return (f"PartitionPlan: {self.n} ops on {self.k} devices, "
+                f"makespan {r.makespan_s * 1e3:.3f} ms, "
+                f"feasible={r.feasible}, moved={r.moved_nodes}, "
+                f"peaks [{peaks}]")
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Write the plan: ``path`` (JSON header) + sibling ``.npz``.
+
+        The header records the schema version, graph fingerprint, a
+        sha256 of the assignment payload, the full report, and user
+        metadata; the npz holds the arrays bit-for-bit. Returns ``path``.
+        """
+        apath = _npz_path(path)
+        assignment = np.ascontiguousarray(self.assignment, dtype=np.int64)
+        arrays = {"assignment": assignment,
+                  "peak_mem": np.asarray(self.report.peak_mem_bytes,
+                                         dtype=np.float64)}
+        if self.names is not None:
+            arrays["names"] = np.asarray(self.names)
+        with open(apath, "wb") as f:
+            np.savez(f, **arrays)
+        header = {
+            "format": PLAN_FORMAT,
+            "schema_version": self.schema_version,
+            "graph_fingerprint": self.fingerprint,
+            "num_nodes": self.n,
+            "devices": self.k,
+            "memory": _jsonable(self.devices.memory) if self.devices
+                      else None,
+            "assignment_file": os.path.basename(apath),
+            "assignment_sha256": hashlib.sha256(
+                assignment.tobytes()).hexdigest(),
+            "report": self.report.to_dict(),
+            "meta": _jsonable(self.meta),
+        }
+        with open(path, "w") as f:
+            json.dump(header, f, indent=1)
+        return path
+
+    @classmethod
+    def load(cls, path: str, traced: TracedModel | None = None,
+             graph: CostGraph | None = None) -> "PartitionPlan":
+        """Load and validate a plan artifact.
+
+        Raises :class:`PlanValidationError` on an unknown schema version,
+        a corrupted assignment payload, or — when ``traced``/``graph`` is
+        supplied — a graph-fingerprint mismatch (the plan was computed
+        for a different model). A plan loaded without a graph can still
+        be inspected and saved, but must be :meth:`bind`-ed before
+        :meth:`execute`.
+        """
+        with open(path) as f:
+            header = json.load(f)
+        if header.get("format") != PLAN_FORMAT:
+            raise PlanValidationError(
+                f"{path}: not a {PLAN_FORMAT} file "
+                f"(format={header.get('format')!r})")
+        ver = header.get("schema_version")
+        if ver not in KNOWN_SCHEMA_VERSIONS:
+            raise PlanValidationError(
+                f"{path}: unknown plan schema version {ver!r}; this build "
+                f"supports {list(KNOWN_SCHEMA_VERSIONS)} — regenerate the "
+                f"plan with repro.partition or upgrade the library")
+        apath = os.path.join(os.path.dirname(os.path.abspath(path)),
+                             header["assignment_file"])
+        with np.load(apath) as z:
+            assignment = np.asarray(z["assignment"], dtype=np.int64)
+            peak_mem = np.asarray(z["peak_mem"], dtype=np.float64)
+            names = np.asarray(z["names"]) if "names" in z.files else None
+        digest = hashlib.sha256(
+            np.ascontiguousarray(assignment).tobytes()).hexdigest()
+        if digest != header["assignment_sha256"]:
+            raise PlanValidationError(
+                f"{path}: assignment payload corrupted "
+                f"(sha256 {digest[:12]}… != header "
+                f"{header['assignment_sha256'][:12]}…)")
+        if assignment.shape[0] != header["num_nodes"]:
+            raise PlanValidationError(
+                f"{path}: assignment has {assignment.shape[0]} nodes, "
+                f"header says {header['num_nodes']}")
+        report = PlanReport.from_dict(header["report"])
+        # npz carries the peaks bit-for-bit; trust it over the JSON floats
+        report.peak_mem_bytes = [float(x) for x in peak_mem]
+        mem = header.get("memory")
+        plan = cls(assignment=assignment, k=int(header["devices"]),
+                   fingerprint=header["graph_fingerprint"], report=report,
+                   devices=DeviceSpec(int(header["devices"]), mem),
+                   meta=dict(header.get("meta") or {}), names=names,
+                   schema_version=int(ver))
+        if traced is not None or graph is not None:
+            plan.bind(traced if traced is not None
+                      else TracedModel(graph, None, graph.fingerprint()))
+        return plan
+
+    # -- binding & execution ------------------------------------------------
+    def bind(self, traced: TracedModel) -> "PartitionPlan":
+        """Attach a fresh trace to this plan, validating that it is the
+        same computation the plan was produced for."""
+        if traced.fingerprint != self.fingerprint:
+            raise PlanValidationError(
+                f"graph fingerprint mismatch: plan was computed for "
+                f"{self.fingerprint[:16]}…, got {traced.fingerprint[:16]}… "
+                f"— the model, shapes, or cost model changed; re-run "
+                f"repro.partition")
+        if traced.graph.n != self.n:
+            raise PlanValidationError(
+                f"graph has {traced.graph.n} nodes, plan has {self.n}")
+        self.traced = traced
+        return self
+
+    def _jax_devices(self, devices=None) -> list:
+        if devices is None and self.devices is not None:
+            devices = self.devices.jax_devices
+        if devices is None:
+            import jax
+            devices = jax.devices()
+        devices = list(devices)
+        if len(devices) < self.k:
+            devices = [devices[i % len(devices)] for i in range(self.k)]
+        return devices
+
+    def execute(self, *args, devices=None, **kwargs):
+        """Run the recorded program under this placement (the paper's
+        "placement file → execution engine" path).
+
+        ``devices`` overrides the jax devices (cycled when fewer than K
+        are available — the CPU-host test setup). Requires a bound trace
+        recorded with ``record=True``.
+        """
+        if self.traced is None or self.traced.program is None:
+            raise PlanValidationError(
+                "plan has no executable program: trace with record=True "
+                "and partition (or PartitionPlan.bind) before execute()")
+        return _execute(self.traced.program, self.assignment,
+                        self._jax_devices(devices), *args, **kwargs)
+
+    # -- bridges ------------------------------------------------------------
+    def to_pipeline_stages(self, layer_costs, layer_mem, act_bytes: float,
+                           num_stages: int | None = None,
+                           mem_cap: float | None = None, **kw):
+        """Bridge to the pipeline planner: contiguous stage boundaries
+        for a layer chain, defaulting the stage count to this plan's K
+        and the stage memory cap to this plan's per-device capacity."""
+        from .pipeline.pardnn_pp import plan_stages
+        if num_stages is None:
+            num_stages = self.k
+        if mem_cap is None and self.devices is not None \
+                and self.devices.memory is not None:
+            m = self.devices.memory
+            mem_cap = float(m) if np.isscalar(m) else float(np.max(m))
+        return plan_stages(layer_costs, layer_mem, act_bytes=act_bytes,
+                           num_stages=num_stages, mem_cap=mem_cap, **kw)
+
+    def compare(self, baselines: Iterable[str] = ("rr", "topo"),
+                graph: CostGraph | None = None) -> dict:
+        """Run baseline partitioners on the same graph; returns
+        ``{name: {"makespan_s": ..., "speedup": plan-vs-baseline}}``."""
+        from .core.baselines import BASELINES
+        g = graph if graph is not None else \
+            (self.traced.graph if self.traced is not None else None)
+        if g is None:
+            raise ValueError("compare() needs a bound trace or graph=")
+        out = {}
+        for name in baselines:
+            if name not in BASELINES:
+                raise ValueError(f"unknown baseline {name!r}; "
+                                 f"have {sorted(BASELINES)}")
+            b = BASELINES[name](g, self.k)
+            out[name] = {"makespan_s": float(b.makespan),
+                         "speedup": float(b.makespan / self.makespan)
+                         if self.makespan else float("nan")}
+        return out
+
+
+# ---------------------------------------------------------------------------
+# partitioning
+# ---------------------------------------------------------------------------
+def partition(traced_or_graph: TracedModel | CostGraph,
+              devices: DeviceSpec | int | Sequence = 1,
+              memory: float | Sequence[float] | None = None,
+              options: PardnnOptions | None = None,
+              progress: Callable[[str, dict], None] | None = None,
+              meta: dict | None = None) -> PartitionPlan:
+    """Partition a traced model (or raw cost graph) into a
+    :class:`PartitionPlan`.
+
+    Args:
+        traced_or_graph: A :class:`TracedModel` from :func:`trace`, or a
+            bare finalized :class:`CostGraph`.
+        devices: Device count, a :class:`DeviceSpec`, or a list of jax
+            devices.
+        memory: Per-device capacity in bytes (scalar or per-device);
+            overrides nothing if the DeviceSpec already carries one.
+        options: :class:`~repro.core.partitioner.PardnnOptions`.
+        progress: Optional ``progress(stage, info)`` callback, threaded
+            through the partitioner's stages and Step-2 rounds.
+        meta: Free-form JSON-serializable metadata stored in the plan
+            header (arch name, config hash, …).
+    """
+    if isinstance(traced_or_graph, TracedModel):
+        traced = traced_or_graph
+    elif isinstance(traced_or_graph, CostGraph):
+        g = traced_or_graph
+        traced = TracedModel(graph=g, program=None,
+                             fingerprint=g.fingerprint())
+    else:
+        raise TypeError(
+            f"partition() takes a TracedModel or CostGraph, got "
+            f"{type(traced_or_graph).__name__}")
+    spec = DeviceSpec.resolve(devices, memory)
+    placement = pardnn_partition(traced.graph, spec.count,
+                                 mem_caps=spec.mem_caps(), options=options,
+                                 progress=progress)
+    return PartitionPlan(
+        assignment=np.asarray(placement.assignment, dtype=np.int64),
+        k=spec.count, fingerprint=traced.fingerprint,
+        report=PlanReport.from_placement(placement), devices=spec,
+        meta=dict(meta or {}),
+        names=np.asarray(traced.graph.names) if traced.graph.names else None,
+        traced=traced)
+
+
+__all__ = [
+    "trace", "partition", "TracedModel", "DeviceSpec", "PartitionPlan",
+    "PlanReport", "PlanValidationError", "PardnnOptions",
+    "PLAN_SCHEMA_VERSION",
+]

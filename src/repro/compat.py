@@ -1,0 +1,41 @@
+"""Compatibility shims for the installed JAX version.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to
+``jax.shard_map`` and renamed its replication-check kwarg from
+``check_rep`` to ``check_vma`` along the way. The shim below presents
+the modern surface (``check_vma``) on either JAX, so call sites never
+branch on version.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any
+
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve_shard_map() -> tuple[Any, str]:
+    """(shard_map function, name of its replication-check kwarg)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        params = {}
+    kwarg = "check_vma" if "check_vma" in params else "check_rep"
+    return fn, kwarg
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None) -> Any:
+    """``jax.shard_map`` if available, else the experimental one.
+
+    ``check_vma`` maps onto the old ``check_rep`` on JAX versions that
+    predate the rename; None leaves the library default in place.
+    """
+    fn, kwarg = _resolve_shard_map()
+    kw = {} if check_vma is None else {kwarg: check_vma}
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

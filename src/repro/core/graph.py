@@ -15,6 +15,7 @@ run as batched numpy sweeps instead of per-node Python loops.
 """
 from __future__ import annotations
 
+import hashlib
 import heapq
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
@@ -379,6 +380,32 @@ class CostGraph:
         return float(np.max(bl)) if self.n else 0.0
 
     # -- convenience --------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Deterministic content hash of the graph's structure and costs.
+
+        Covers node count, comp/mem/ntype arrays, the flat edge list
+        (src, dst, comm) and colocation constraints — everything a
+        partition depends on. Two traces of the same function produce the
+        same fingerprint, so a saved :class:`~repro.api.PartitionPlan`
+        can be validated against a fresh trace before reuse.
+        """
+        h = hashlib.sha256()
+        h.update(np.int64(self.n).tobytes())
+        h.update(np.ascontiguousarray(
+            np.asarray(self.comp, dtype=np.float64)).tobytes())
+        h.update(np.ascontiguousarray(
+            np.asarray(self.mem, dtype=np.float64)).tobytes())
+        h.update(np.ascontiguousarray(
+            np.asarray(self.ntype, dtype=np.int8)).tobytes())
+        _, src, dst, w = self.flat_edges()
+        h.update(src.tobytes())
+        h.update(dst.tobytes())
+        h.update(np.ascontiguousarray(w).tobytes())
+        for k in sorted(self.colocate_with):
+            h.update(np.asarray([k, self.colocate_with[k]],
+                                dtype=np.int64).tobytes())
+        return h.hexdigest()
+
     def subgraph_active(self, visited: np.ndarray) -> np.ndarray:
         return ~visited
 

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
+from typing import Callable
 
 import numpy as np
 
@@ -66,7 +67,9 @@ class PardnnOptions:
 
 def pardnn_partition(g: CostGraph, k: int,
                      mem_caps: np.ndarray | float | None = None,
-                     options: PardnnOptions | None = None) -> Placement:
+                     options: PardnnOptions | None = None,
+                     progress: Callable[[str, dict], None] | None = None
+                     ) -> Placement:
     """Partition cost graph ``g`` across ``k`` devices (the full ParDNN
     algorithm, Algorithms 1-2 + Step-2).
 
@@ -78,6 +81,12 @@ def pardnn_partition(g: CostGraph, k: int,
             to every device, an array of length ``k``, or None to skip
             Step-2's overflow handling entirely.
         options: :class:`PardnnOptions`; defaults are the paper's setup.
+        progress: Optional ``progress(stage, info)`` callback invoked at
+            every stage boundary (``"slice"``, ``"map"``, ``"refine"``,
+            one ``"step2_round"`` per memory round, ``"done"``) with a
+            dict of counters for that stage — lets long partitions (100k+
+            node graphs) report liveness to callers such as
+            :func:`repro.api.partition`.
 
     Returns:
         :class:`~repro.core.graph.Placement` with the node→device
@@ -88,14 +97,18 @@ def pardnn_partition(g: CostGraph, k: int,
     """
     opt = options or PardnnOptions()
     eng = opt.engine
+    notify = progress if progress is not None else (lambda stage, info: None)
     t0 = time.perf_counter()
 
     # ---------------- Step-1 ----------------
     s = slice_graph(g, k)
     t_slice = time.perf_counter()
+    notify("slice", {"num_secondaries": len(s.secondaries),
+                     "seconds": t_slice - t0})
 
     m = map_clusters(g, s) if opt.lalb else glb_map(g, s)
     t_map = time.perf_counter()
+    notify("map", {**m.stats, "seconds": t_map - t_slice})
 
     assignment = m.assignment
     ref_stats: dict = {}
@@ -122,9 +135,12 @@ def pardnn_partition(g: CostGraph, k: int,
         else:
             ref_stats["reverted"] = True
     t_refine = time.perf_counter()
+    if opt.refine:
+        notify("refine", {**ref_stats, "seconds": t_refine - t_map})
 
     # ---------------- Step-2 ----------------
     moved_total = 0
+    step2_rounds = 0
     feasible = True
     pinned: set[int] = set()
     caps = None
@@ -141,6 +157,7 @@ def pardnn_partition(g: CostGraph, k: int,
                 feasible = True
                 break
             feasible = False
+            step2_rounds += 1
             tracker = (IncrementalMemoryTracker(g, assignment, sched, k)
                        if opt.use_tracker else None)
             headroom = caps - (tracker.peaks() if tracker is not None
@@ -161,6 +178,9 @@ def pardnn_partition(g: CostGraph, k: int,
                 moved_total += len(res.moved)
                 if res.moved:
                     progressed = True
+            notify("step2_round", {"round": step2_rounds,
+                                   "overflowing_pes": len(overflows),
+                                   "moved_total": moved_total})
             if not progressed:
                 break  # ran out of movable nodes (§3.2.3 termination)
         else:
@@ -175,6 +195,8 @@ def pardnn_partition(g: CostGraph, k: int,
         feasible = not prof.first_overflow(caps)
     t_end = time.perf_counter()
 
+    notify("done", {"makespan": sched.makespan, "feasible": feasible,
+                    "moved": moved_total, "seconds": t_end - t0})
     return Placement(
         assignment=assignment, k=k, makespan=sched.makespan,
         peak_mem=prof.peak, feasible=feasible, moved_nodes=moved_total,
@@ -187,5 +209,6 @@ def pardnn_partition(g: CostGraph, k: int,
             "num_secondaries": len(s.secondaries),
             "mapping": m.stats,
             "refinement": ref_stats,
+            "step2_rounds": step2_rounds,
             "moved_frac": moved_total / max(g.n, 1),
         })

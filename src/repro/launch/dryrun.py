@@ -18,8 +18,15 @@ Usage:
   python -m repro.launch.dryrun --all [--mesh single|multi|both]
   python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
   python -m repro.launch.dryrun --list
+  python -m repro.launch.dryrun --pardnn --arch gemma3-1b \
+      --pardnn-devices 4                       # emit PartitionPlan files
 Flags for §Perf iterations: --remat, --tag (variant label kept in the
 result file name so baselines are never overwritten).
+
+``--pardnn`` goes through the ``repro`` facade: it traces each arch's
+reduced training step, partitions it, and writes the versioned plan
+artifact next to the dry-run results — the op-level counterpart of the
+mesh cells above.
 """
 import argparse       # noqa: E402
 import json           # noqa: E402
@@ -245,6 +252,28 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
     return res
 
 
+def run_pardnn_plan(arch: str, devices: int, out_dir: str,
+                    mem_cap_mb: float | None = None) -> dict:
+    """Trace the arch's reduced train step and emit a versioned
+    :class:`repro.api.PartitionPlan` artifact (JSON header + npz)."""
+    import repro
+    from repro.configs import reduced
+    from repro.models import init_params, loss_fn, smoke_batch
+
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg)
+    traced = repro.trace(lambda p: loss_fn(cfg, p, batch)[0], params)
+    plan = repro.partition(
+        traced, devices=devices,
+        memory=mem_cap_mb * 1e6 if mem_cap_mb else None,
+        meta={"arch": arch, "config": "reduced", "source": "dryrun"})
+    path = os.path.join(out_dir, f"{arch}__pardnn_k{devices}.plan.json")
+    plan.save(path)
+    return {"arch": arch, "ops": plan.n, "path": path,
+            "makespan_s": plan.makespan, "feasible": plan.feasible}
+
+
 def cell_name(arch, shape, mesh_kind, tag=""):
     t = f"__{tag}" if tag else ""
     return f"{arch}__{shape}__{mesh_kind}{t}"
@@ -262,7 +291,28 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--pardnn", action="store_true",
+                    help="emit PartitionPlan artifacts via the repro "
+                         "facade instead of lower/compile cells")
+    ap.add_argument("--pardnn-devices", type=int, default=4)
+    ap.add_argument("--pardnn-mem-cap-mb", type=float, default=None)
     args = ap.parse_args()
+
+    if args.pardnn:
+        os.makedirs(args.out, exist_ok=True)
+        archs = ASSIGNED_ARCHS if args.arch is None else [args.arch]
+        for a in archs:
+            t0 = time.perf_counter()
+            try:
+                res = run_pardnn_plan(a, args.pardnn_devices, args.out,
+                                      args.pardnn_mem_cap_mb)
+                print(f"[OK] {a}: {res['ops']} ops, makespan "
+                      f"{res['makespan_s'] * 1e3:.3f} ms, "
+                      f"feasible={res['feasible']} -> {res['path']} "
+                      f"({time.perf_counter() - t0:.1f}s)", flush=True)
+            except Exception as e:
+                print(f"[FAIL] {a}: {type(e).__name__}: {e}", flush=True)
+        return
 
     cells = []
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]

@@ -3,6 +3,18 @@ from .transformer import (decode_step, encoder_logits, forward, init_cache,
                           init_params, loss_fn, prefill)
 from .io_spec import input_specs, params_spec, cache_spec
 
+
+def smoke_batch(cfg, batch: int = 2, seq: int = 32):
+    """Tiny all-zeros training batch matching the config's frontend —
+    the example input shared by the tracing examples and dry-run."""
+    import jax.numpy as jnp
+    if cfg.frontend is not None:
+        return {"embeds": jnp.zeros((batch, seq, cfg.d_model)),
+                "targets": jnp.zeros((batch, seq), jnp.int32)}
+    return {"tokens": jnp.zeros((batch, seq), jnp.int32),
+            "targets": jnp.zeros((batch, seq), jnp.int32)}
+
+
 __all__ = ["decode_step", "encoder_logits", "forward", "init_cache",
            "init_params", "loss_fn", "prefill", "input_specs",
-           "params_spec", "cache_spec"]
+           "params_spec", "cache_spec", "smoke_batch"]

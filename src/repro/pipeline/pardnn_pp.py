@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.graph import CostGraph
 from repro.core.emulator import emulate
 
@@ -221,13 +222,72 @@ def pipeline_apply(mesh: Mesh, layer_fn, stage_params, mask,
         return jax.lax.dynamic_index_in_dim(xm, idx, axis=0,
                                             keepdims=False)
 
-    from jax import shard_map as _shard_map
     pspec = jax.tree_util.tree_map(
         lambda _: P(stage_axis), stage_params)
-    out = _shard_map(
+    out = shard_map(
         stage_body, mesh=mesh,
         in_specs=(pspec, P(stage_axis), P()),
         out_specs=P(),
         check_vma=False,
     )(stage_params, mask, x_micro)
     return out
+
+
+# ----------------------------------------------------------- cost model
+def layer_flops(cfg, kind: str, tokens: float, seq: int = 4096) -> float:
+    """Per-layer forward FLOPs at ``tokens`` tokens (coarse analytic).
+
+    The layer-chain cost model behind :func:`config_stage_plan` and the
+    pipeline benchmarks — heterogeneity here (mamba vs attn vs MoE) is
+    exactly what makes ParDNN boundaries beat the uniform L/P split.
+    """
+    D = cfg.d_model
+    f = 0.0
+    if kind.startswith(("attn", "swa")):
+        f += 2 * tokens * D * (2 * cfg.q_dim + 2 * cfg.kv_dim)
+        kv_eff = (min(cfg.sliding_window, seq) if kind.startswith("swa")
+                  else seq / 2)          # causal average vs window
+        f += 4 * tokens * kv_eff * cfg.head_dim * cfg.num_heads
+    elif kind.startswith("mla"):
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        f += 2 * tokens * D * (cfg.num_heads * qk + cfg.kv_lora_rank * 4)
+    elif kind.startswith("mamba"):
+        di = D * cfg.mamba.expand
+        f += 2 * tokens * D * 2 * di + 2 * tokens * di * D
+        f += 6 * tokens * di * cfg.mamba.d_state
+    elif kind == "rwkv":
+        f += 2 * tokens * D * 4 * D
+    if kind.endswith("moe"):
+        m = cfg.moe
+        f += 2 * tokens * m.experts_per_token * 3 * D * m.d_ff
+        f += 2 * tokens * (3 if cfg.gated_mlp else 2) * D * m.d_ff \
+            * m.num_shared_experts
+    elif not kind.startswith("rwkv"):
+        f += 2 * tokens * (3 if cfg.gated_mlp else 2) * D * cfg.d_ff
+    else:
+        f += 2 * tokens * 2 * D * cfg.d_ff
+    return f
+
+
+def config_stage_plan(cfg, num_stages: int, *, tokens: float = 1e6,
+                      act_bytes: float = 1e8,
+                      mem_cap: float | None = None) -> StagePlan:
+    """ParDNN-PP plan for a config's full layer chain.
+
+    Builds the per-layer cost/memory vectors from the architecture
+    (prelude + repeated block pattern, embedding table riding with the
+    first layer, untied LM head with the last) and runs
+    :func:`plan_stages`. This is the pipeline side of
+    :meth:`repro.api.PartitionPlan.to_pipeline_stages`.
+    """
+    kinds = list(cfg.prelude) + list(cfg.block_pattern) * cfg.num_periods
+    costs = [layer_flops(cfg, k, tokens) for k in kinds]
+    per_layer = cfg.param_count() / max(cfg.num_layers, 1)
+    mems = [per_layer * 2.0] * len(costs)
+    embed_b = cfg.vocab_size * cfg.d_model * 2.0
+    if mems:
+        mems[0] += embed_b
+        if not cfg.tie_embeddings:
+            mems[-1] += embed_b
+    return plan_stages(costs, mems, act_bytes=act_bytes,
+                       num_stages=num_stages, mem_cap=mem_cap)

@@ -99,11 +99,18 @@ class ServingEngine:
         for i in live:
             req = self.active[i]
             tok = int(nxt[i])
+            # EOS is recognized on the token this tick *consumed*: by the
+            # time the host inspects it, the decode for its successor has
+            # already run, so the in-flight token is retained before the
+            # slot frees (the EOS token itself was appended last tick —
+            # never dropped). I.e. the stop check trails the decode by
+            # one tick, the contract test_eos_stops_generation pins.
+            hit_eos = (req.eos_id is not None
+                       and int(self.tokens[i, 0]) == req.eos_id)
             req.output.append(tok)
             self.pos[i] += 1
             self.budget[i] -= 1
-            if self.budget[i] <= 0 or (req.eos_id is not None
-                                       and tok == req.eos_id):
+            if self.budget[i] <= 0 or hit_eos:
                 req.done = True
                 self.completed[req.rid] = req
                 self.active[i] = None

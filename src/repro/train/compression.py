@@ -54,6 +54,25 @@ def ef_int8_psum(grads: Any, errors: Any, axis_name: str,
             jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs]))
 
 
+def make_compressed_psum(mesh, axis_name: str = "pod", *,
+                         error_in_spec=None):
+    """shard_map-wrapped :func:`ef_int8_psum` over ``axis_name``.
+
+    Returns ``fn(grads, errors) -> (reduced_grads, new_errors)`` with
+    grads sharded over the axis, errors replicated on the way in (fresh
+    :func:`init_error_state`) and per-shard on the way out. Built on the
+    version-compat shim so it runs on both old and new JAX spellings of
+    shard_map.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    n = int(mesh.shape[axis_name])
+    e_spec = P() if error_in_spec is None else error_in_spec
+    return shard_map(lambda g, e: ef_int8_psum(g, e, axis_name, n),
+                     mesh=mesh, in_specs=(P(axis_name), e_spec),
+                     out_specs=(P(), P(axis_name)), check_vma=False)
+
+
 def init_error_state(params_or_grads: Any) -> Any:
     return jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params_or_grads)

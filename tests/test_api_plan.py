@@ -1,0 +1,195 @@
+"""The plan-centric facade: trace/partition/PartitionPlan round-trips.
+
+Covers the acceptance contract: save→load is bit-for-bit lossless
+(assignment, makespan, peaks, report), fingerprint/schema mismatches
+raise clearly, a loaded plan executes to the un-partitioned program's
+output, and the legacy trace_cost_graph/pardnn_partition surface still
+agrees with the facade.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api import PLAN_SCHEMA_VERSION, PlanValidationError
+from repro.core import pardnn_partition
+from repro.core.graph import random_dag
+from repro.core.tracing import trace_cost_graph
+
+
+def _mlp(params, x):
+    def layer(h, p):
+        w1, w2 = p
+        h = jnp.tanh(h @ w1) @ w2
+        return h, jnp.sum(h)
+    h, sums = jax.lax.scan(layer, x, params)
+    return jnp.mean(h ** 2) + jnp.sum(sums)
+
+
+def _example():
+    key = jax.random.PRNGKey(0)
+    L, D, H = 3, 8, 16
+    params = (jax.random.normal(key, (L, D, H)) * 0.1,
+              jax.random.normal(key, (L, H, D)) * 0.1)
+    x = jax.random.normal(key, (2, D))
+    return params, x
+
+
+@pytest.fixture(scope="module")
+def traced():
+    params, x = _example()
+    return repro.trace(_mlp, params, x, record=True), params, x
+
+
+# ---------------------------------------------------------------- trace
+def test_trace_returns_traced_model_both_modes():
+    params, x = _example()
+    t0 = repro.trace(_mlp, params, x)
+    assert t0.program is None and t0.graph.n > 0
+    t1 = repro.trace(_mlp, params, x, record=True)
+    assert t1.program is not None
+
+
+def test_fingerprint_deterministic_and_discriminating():
+    params, x = _example()
+    a = repro.trace(_mlp, params, x).fingerprint
+    b = repro.trace(_mlp, params, x).fingerprint
+    assert a == b
+    c = repro.trace(jax.grad(_mlp), params, x).fingerprint
+    assert a != c
+
+
+# ------------------------------------------------------------- partition
+def test_partition_matches_legacy_surface(traced):
+    t, _, _ = traced
+    plan = repro.partition(t, devices=2)
+    legacy = pardnn_partition(t.graph, 2)
+    np.testing.assert_array_equal(plan.assignment, legacy.assignment)
+    assert plan.makespan == legacy.makespan
+    # the old tuple-returning tracer still works (compat surface)
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    assert g.n == t.graph.n
+
+
+def test_partition_accepts_bare_graph_and_rejects_junk():
+    g = random_dag(200, seed=3)
+    plan = repro.partition(g, devices=4, memory=1e6)
+    assert plan.k == 4 and plan.n == 200
+    assert plan.report.counters["step2_rounds"] >= 0
+    with pytest.raises(TypeError):
+        repro.partition([1, 2, 3], devices=2)
+
+
+def test_progress_callback_threaded(traced):
+    t, _, _ = traced
+    events = []
+    repro.partition(t, devices=2, memory=64.0,  # tiny cap forces step-2
+                    progress=lambda s, i: events.append((s, i)))
+    stages = [s for s, _ in events]
+    assert stages[0] == "slice" and stages[-1] == "done"
+    assert "map" in stages and "refine" in stages
+    assert "step2_round" in stages  # the cap is unmeetable -> rounds ran
+
+
+# ------------------------------------------------------------ round-trip
+def test_roundtrip_bit_for_bit(tmp_path, traced):
+    t, _, _ = traced
+    plan = repro.partition(t, devices=2, memory=1e9,
+                           meta={"arch": "mlp", "note": [1, 2.5, "x"]})
+    path = plan.save(str(tmp_path / "p.json"))
+    loaded = repro.PartitionPlan.load(path)
+    np.testing.assert_array_equal(loaded.assignment, plan.assignment)
+    assert loaded.assignment.dtype == plan.assignment.dtype
+    assert loaded.makespan == plan.makespan          # exact, not approx
+    np.testing.assert_array_equal(loaded.peak_mem, plan.peak_mem)
+    assert loaded.report == plan.report
+    assert loaded.meta == plan.meta
+    assert loaded.k == plan.k
+    assert loaded.schema_version == PLAN_SCHEMA_VERSION
+    assert loaded.names is not None and len(loaded.names) == plan.n
+
+
+def test_load_rejects_fingerprint_mismatch(tmp_path, traced):
+    t, params, x = traced
+    plan = repro.partition(t, devices=2)
+    path = plan.save(str(tmp_path / "p.json"))
+    other = repro.trace(jax.grad(_mlp), params, x)
+    with pytest.raises(PlanValidationError, match="fingerprint"):
+        repro.PartitionPlan.load(path, traced=other)
+    # same check through bind() on an already-loaded plan
+    loaded = repro.PartitionPlan.load(path)
+    with pytest.raises(PlanValidationError, match="fingerprint"):
+        loaded.bind(other)
+
+
+def test_load_rejects_unknown_schema_version(tmp_path, traced):
+    t, _, _ = traced
+    path = repro.partition(t, devices=2).save(str(tmp_path / "p.json"))
+    header = json.load(open(path))
+    header["schema_version"] = 99
+    json.dump(header, open(path, "w"))
+    with pytest.raises(PlanValidationError, match="schema version"):
+        repro.PartitionPlan.load(path)
+
+
+def test_load_rejects_corrupted_payload(tmp_path, traced):
+    t, _, _ = traced
+    plan = repro.partition(t, devices=2)
+    path = plan.save(str(tmp_path / "p.json"))
+    tampered = plan.assignment.copy()
+    tampered[0] = (tampered[0] + 1) % plan.k
+    np.savez(str(tmp_path / "p.npz"), assignment=tampered,
+             peak_mem=plan.peak_mem)
+    with pytest.raises(PlanValidationError, match="corrupted"):
+        repro.PartitionPlan.load(path)
+
+
+def test_load_rejects_wrong_format(tmp_path):
+    path = str(tmp_path / "notaplan.json")
+    json.dump({"hello": "world"}, open(path, "w"))
+    with pytest.raises(PlanValidationError, match="not a"):
+        repro.PartitionPlan.load(path)
+
+
+# -------------------------------------------------------------- execute
+def test_execute_matches_unpartitioned_reference(traced):
+    t, params, x = traced
+    plan = repro.partition(t, devices=2)
+    out = plan.execute(params, x)
+    ref = _mlp(params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+def test_loaded_plan_executes_after_bind(tmp_path, traced):
+    t, params, x = traced
+    path = repro.partition(t, devices=2).save(str(tmp_path / "p.json"))
+    loaded = repro.PartitionPlan.load(path, traced=t)  # bind at load
+    out = loaded.execute(params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_mlp(params, x)),
+                               rtol=1e-5)
+
+
+def test_execute_without_program_raises(tmp_path, traced):
+    t, _, _ = traced
+    path = repro.partition(t, devices=2).save(str(tmp_path / "p.json"))
+    loaded = repro.PartitionPlan.load(path)  # no trace bound
+    with pytest.raises(PlanValidationError, match="record=True"):
+        loaded.execute()
+
+
+# -------------------------------------------------------------- bridges
+def test_compare_and_pipeline_bridge(traced):
+    t, _, _ = traced
+    plan = repro.partition(t, devices=2)
+    cmp = plan.compare(["rr"])
+    assert cmp["rr"]["makespan_s"] > 0 and cmp["rr"]["speedup"] > 0
+    with pytest.raises(ValueError, match="unknown baseline"):
+        plan.compare(["nope"])
+    sp = plan.to_pipeline_stages([1.0] * 6, [1.0] * 6, act_bytes=0.0)
+    assert len(sp.boundaries) == plan.k
+    assert sum(sp.layers_per_stage) == 6

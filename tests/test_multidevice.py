@@ -85,15 +85,13 @@ def test_compressed_psum_over_pod_axis():
         import warnings; warnings.filterwarnings('ignore')
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from repro.train.compression import ef_int8_psum, init_error_state
+        from repro.train.compression import (make_compressed_psum,
+                                             init_error_state)
         mesh = jax.make_mesh((4,), ('pod',))
         key = jax.random.PRNGKey(0)
         grads = {'w': jax.random.normal(key, (4, 32, 8))}
         errors = init_error_state({'w': jnp.zeros((32, 8))})
-        out, new_e = jax.shard_map(
-            lambda g, e: ef_int8_psum(g, e, 'pod', 4), mesh=mesh,
-            in_specs=(P('pod'), P()), out_specs=(P(), P('pod')),
-            check_vma=False)(grads, errors)
+        out, new_e = make_compressed_psum(mesh)(grads, errors)
         ref = jnp.mean(grads['w'], 0)
         rel = float(jnp.max(jnp.abs(out['w'][0] - ref))
                     / jnp.max(jnp.abs(ref)))
