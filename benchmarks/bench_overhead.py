@@ -1,18 +1,44 @@
-"""§5.4.1: ParDNN partitioning overhead vs graph size.
+"""§5.4.1: ParDNN partitioning overhead vs graph size — plus the
+execution-side counterpart: interpreter vs compiled segment runtime.
 
-Paper: 18 s (Word-RNN, 2 GPUs) … 117 s (TRN-2, 16 GPUs); ≤2 min for
-graphs up to ~190k nodes. We time the full pipeline (Step-1 + Step-2
-with memory caps) over growing graphs and report seconds + the paper
-bound check. Also verifies the measured moved-node fraction (~8% avg in
-the paper)."""
+Partitioning overhead (``run``): paper reports 18 s (Word-RNN, 2 GPUs)
+… 117 s (TRN-2, 16 GPUs); ≤2 min for graphs up to ~190k nodes. We time
+the full pipeline (Step-1 + Step-2 with memory caps) over growing
+graphs and report seconds + the paper bound check. Also verifies the
+measured moved-node fraction (~8% avg in the paper).
+
+Runtime overhead (``run_runtime`` / ``--runtime``): traces the
+``repro_lm_100m`` (reduced) training-step loss on CPU, partitions it,
+and executes the placement through both engines — the op-by-op
+interpreter and the compiled segment runtime — reporting segments,
+compile seconds, interpreter-vs-compiled speedup, and measured vs
+predicted per-device peak bytes. Results land in ``BENCH_runtime.json``
+(``--out``) so CI records the perf trajectory.
+
+    PYTHONPATH=src python benchmarks/bench_overhead.py                    # partition overhead
+    PYTHONPATH=src python benchmarks/bench_overhead.py --runtime --tiny \
+        --out BENCH_runtime.json                                          # runtime smoke
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
 
 import numpy as np
 
-from repro.core import pardnn_partition
-from repro.core.modelgraphs import trn, wrn
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from .common import emit, timer
+from repro.core import pardnn_partition           # noqa: E402
+from repro.core.modelgraphs import trn, wrn       # noqa: E402
+
+try:                                    # package mode (benchmarks.run)
+    from .common import emit, timer
+except ImportError:                     # standalone script mode
+    from common import emit, timer
 
 
 def run(full: bool = False, k: int = 16) -> dict:
@@ -45,5 +71,91 @@ def run(full: bool = False, k: int = 16) -> dict:
     return out
 
 
+def run_runtime(tiny: bool = False, k: int = 4,
+                out_path: str | None = None,
+                arch: str = "repro-lm-100m") -> dict:
+    """Interpreter vs compiled segment runtime on a real traced step.
+
+    Requires ``k`` host devices — run standalone (``--runtime``) so the
+    XLA device-count flag is set before jax initializes.
+    """
+    import jax
+    import repro
+    from repro.configs import get_config, reduced
+    from repro.models import init_params, loss_fn, smoke_batch
+
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, batch=2, seq=32) if tiny \
+        else smoke_batch(cfg, batch=4, seq=64)
+
+    with timer() as t_trace:
+        traced = repro.trace(lambda p: loss_fn(cfg, p, batch)[0],
+                             params, record=True)
+    with timer() as t_part:
+        plan = repro.partition(traced, devices=k,
+                               meta={"arch": arch, "source": "bench"})
+
+    devices = jax.devices()
+    device_map = None
+    if len(devices) < k:
+        device_map = [i % len(devices) for i in range(k)]
+
+    bench = plan.benchmark_runtimes(params, device_map=device_map,
+                                    reps=3 if tiny else 5)
+    res = {
+        "arch": arch, "k": k, "tiny": bool(tiny),
+        "graph_nodes": int(traced.n),
+        "program_ops": len(traced.program.program),
+        "trace_s": t_trace["s"], "partition_s": t_part["s"],
+        **bench,
+    }
+    emit(f"runtime/{arch}/n{traced.n}/segments", bench["num_segments"],
+         f"{bench['transfers']} transfers")
+    emit(f"runtime/{arch}/interpreter", bench["interpreter_s"] * 1e6,
+         f"{bench['interpreter_s']:.3f}s all-live op-by-op")
+    emit(f"runtime/{arch}/compiled", bench["compiled_s"] * 1e6,
+         f"{bench['speedup']:.1f}x vs interpreter "
+         f"(compile {bench['compile_s']:.2f}s, "
+         f"first call {bench['compiled_first_call_s']:.2f}s)")
+    for pe, (m, p) in enumerate(zip(bench["measured_peak_bytes"],
+                                    bench["predicted_peak_bytes"])):
+        emit(f"runtime/{arch}/peak_dev{pe}", m,
+             f"measured {m / 1e6:.1f}MB vs predicted {p / 1e6:.1f}MB")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"wrote {out_path}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--runtime", action="store_true",
+                    help="benchmark the execution engines instead of "
+                         "partitioning overhead")
+    ap.add_argument("--arch", default="repro-lm-100m")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--out", default=None,
+                    help="write the runtime results JSON here "
+                         "(e.g. BENCH_runtime.json)")
+    args = ap.parse_args()
+    if args.runtime:
+        # must precede any jax import: give the CPU host k devices so
+        # the placement runs on real (if emulated) separate devices.
+        # Append to any pre-existing XLA_FLAGS rather than skipping.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+        run_runtime(tiny=args.tiny, k=args.devices, out_path=args.out,
+                    arch=args.arch)
+    else:
+        run(full=args.full)
+
+
 if __name__ == "__main__":
-    run()
+    main()

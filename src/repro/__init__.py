@@ -6,7 +6,9 @@ The supported user surface is plan-centric (see ``repro/api.py``):
 
     traced = repro.trace(fn, *example_args, record=True)
     plan = repro.partition(traced, devices=8, memory=16e9)
-    plan.save("step.plan.json"); plan.execute(*args)
+    plan.save("step.plan.json")
+    plan.execute(*args)                    # needs >= 8 jax devices, or
+    plan.execute(*args, device_map=[0]*8)  # fold onto fewer explicitly
 
 Submodules (``repro.core``, ``repro.pipeline``, …) remain importable
 directly; attribute access on the package resolves lazily so that
@@ -14,7 +16,7 @@ directly; attribute access on the package resolves lazily so that
 """
 _API = ("trace", "partition", "TracedModel", "DeviceSpec", "PartitionPlan",
         "PlanReport", "PlanValidationError", "PardnnOptions",
-        "PLAN_SCHEMA_VERSION")
+        "PLAN_SCHEMA_VERSION", "RUNTIMES")
 
 __all__ = list(_API) + ["api"]
 

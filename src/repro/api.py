@@ -11,7 +11,9 @@ contract made concrete:
     plan.save("step.plan.json")          # JSON header + npz assignment
     ...
     plan = repro.PartitionPlan.load("step.plan.json", traced=traced)
-    out = plan.execute(params, batch)    # op-level model parallelism
+    out = plan.execute(params, batch)    # compiled segment runtime
+    # fewer devices than PEs? alias explicitly:
+    #   plan.execute(params, batch, device_map=[0] * plan.k)
 
 ``trace`` always returns a :class:`TracedModel` (no tuple-vs-graph
 return split); ``partition`` always returns a :class:`PartitionPlan`
@@ -35,6 +37,7 @@ from typing import Callable, Iterable, Mapping, Sequence
 import numpy as np
 
 from .core.costmodel import DeviceModel, TPU_V5E
+from .core.errors import PlanValidationError
 from .core.executor import TracedProgram, execute as _execute
 from .core.graph import CostGraph, Placement
 from .core.partitioner import PardnnOptions, pardnn_partition
@@ -44,9 +47,7 @@ PLAN_FORMAT = "repro-partition-plan"
 PLAN_SCHEMA_VERSION = 1
 KNOWN_SCHEMA_VERSIONS = (1,)
 
-
-class PlanValidationError(ValueError):
-    """A plan artifact failed schema/fingerprint/integrity validation."""
+RUNTIMES = ("compiled", "interpret")
 
 
 def _jsonable(x):
@@ -120,6 +121,9 @@ class TracedModel:
     graph: CostGraph
     program: TracedProgram | None
     fingerprint: str
+    # the device model the costs were derived with; the compiled runtime
+    # prices its transfer ops with the same model (transfer_seconds)
+    device_model: DeviceModel | None = None
 
     @property
     def n(self) -> int:
@@ -141,7 +145,8 @@ def trace(fn: Callable, *example_args, record: bool = False,
                            params_residual=params_residual,
                            record=record, **example_kwargs)
     g, prog = res if record else (res, None)
-    return TracedModel(graph=g, program=prog, fingerprint=g.fingerprint())
+    return TracedModel(graph=g, program=prog, fingerprint=g.fingerprint(),
+                       device_model=dev)
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +168,10 @@ class PlanReport:
     moved_nodes: int
     stage_seconds: dict = field(default_factory=dict)
     counters: dict = field(default_factory=dict)
+    # segment-runtime counters from the plan's last compiled execution:
+    # segments, transfers/bytes, compile/execute seconds, measured
+    # per-device peak live bytes (next to the predicted peaks above)
+    runtime: dict = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {"makespan_s": self.makespan_s,
@@ -170,7 +179,8 @@ class PlanReport:
                 "feasible": self.feasible,
                 "moved_nodes": self.moved_nodes,
                 "stage_seconds": self.stage_seconds,
-                "counters": self.counters}
+                "counters": self.counters,
+                "runtime": self.runtime}
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanReport":
@@ -179,7 +189,8 @@ class PlanReport:
                    feasible=bool(d["feasible"]),
                    moved_nodes=int(d["moved_nodes"]),
                    stage_seconds=dict(d.get("stage_seconds", {})),
-                   counters=dict(d.get("counters", {})))
+                   counters=dict(d.get("counters", {})),
+                   runtime=dict(d.get("runtime", {})))
 
     @classmethod
     def from_placement(cls, p: Placement) -> "PlanReport":
@@ -354,31 +365,146 @@ class PartitionPlan:
         self.traced = traced
         return self
 
-    def _jax_devices(self, devices=None) -> list:
+    def _jax_devices(self, devices=None, device_map=None) -> list:
         if devices is None and self.devices is not None:
             devices = self.devices.jax_devices
         if devices is None:
             import jax
             devices = jax.devices()
         devices = list(devices)
+        if device_map is not None:
+            device_map = [int(i) for i in device_map]
+            if len(device_map) < self.k:
+                raise PlanValidationError(
+                    f"device_map has {len(device_map)} entries, plan "
+                    f"uses {self.k} PEs")
+            bad = [i for i in device_map
+                   if i < 0 or i >= len(devices)]
+            if bad:
+                raise PlanValidationError(
+                    f"device_map entries {bad} out of range: "
+                    f"{len(devices)} jax devices available (indices "
+                    f"0..{len(devices) - 1})")
+            devices = [devices[i] for i in device_map]
         if len(devices) < self.k:
-            devices = [devices[i % len(devices)] for i in range(self.k)]
+            raise PlanValidationError(
+                f"plan uses {self.k} PEs but only {len(devices)} jax "
+                f"devices are available — pass device_map= (pe -> device "
+                f"index, e.g. device_map=[0]*{self.k} to fold onto one "
+                f"device) to alias PEs explicitly")
         return devices
 
-    def execute(self, *args, devices=None, **kwargs):
+    def execute(self, *args, devices=None, device_map=None,
+                runtime: str | None = None, donate: bool = True, **kwargs):
         """Run the recorded program under this placement (the paper's
         "placement file → execution engine" path).
 
-        ``devices`` overrides the jax devices (cycled when fewer than K
-        are available — the CPU-host test setup). Requires a bound trace
-        recorded with ``record=True``.
+        Args:
+            devices: overrides the jax devices (defaults to
+                ``jax.devices()``). A plan with more PEs than devices
+                raises; alias PEs explicitly via ``device_map``.
+            device_map: pe -> device-index list realizing the placement
+                on fewer devices (e.g. the CPU-host test setup).
+            runtime: ``"compiled"`` (default; segment runtime — per-device
+                jitted subgraphs, liveness-driven buffer freeing) or
+                ``"interpret"`` (op-by-op reference). Overridable via the
+                ``REPRO_RUNTIME`` env var, mirroring Step-2's
+                ``REPRO_STEP2_ENGINE`` switch. Both paths are pinned
+                bit-equal by the test suite.
+            donate: let the compiled runtime donate dead segment inputs
+                to XLA.
+
+        A compiled execution caches its jitted segments on the plan
+        (recompiles only when the devices change) and records its
+        :class:`~repro.core.runtime.RuntimeStats` in
+        ``report.runtime``. Requires a bound trace recorded with
+        ``record=True``.
         """
         if self.traced is None or self.traced.program is None:
             raise PlanValidationError(
                 "plan has no executable program: trace with record=True "
                 "and partition (or PartitionPlan.bind) before execute()")
-        return _execute(self.traced.program, self.assignment,
-                        self._jax_devices(devices), *args, **kwargs)
+        if runtime is None:
+            runtime = os.environ.get("REPRO_RUNTIME", "compiled")
+        if runtime not in RUNTIMES:
+            raise ValueError(f"unknown runtime {runtime!r}; "
+                             f"have {list(RUNTIMES)}")
+        devs = self._jax_devices(devices, device_map)
+        if runtime == "interpret":
+            return _execute(self.traced.program, self.assignment,
+                            devs, *args, **kwargs)
+        from .core.runtime import CompiledRuntime
+        key = (tuple(devs[:self.k]), donate)
+        rt = getattr(self, "_compiled_runtime", None)
+        if rt is None or rt[0] != key:
+            rt = (key, CompiledRuntime(self.traced.program,
+                                       self.assignment, devs[:self.k],
+                                       donate=donate,
+                                       device_model=self.traced
+                                       .device_model))
+            self._compiled_runtime = rt
+        out = rt[1](*args, **kwargs)
+        self.report.runtime = rt[1].stats.to_dict()
+        return out
+
+    def benchmark_runtimes(self, *args, devices=None, device_map=None,
+                           reps: int = 3, **kwargs) -> dict:
+        """Time both execution engines on this plan with the same inputs.
+
+        One blocked interpreter run, one compiled run paying segment
+        compilation, then ``reps`` steady-state compiled runs (min
+        taken). Returns the comparison dict used by
+        ``launch/dryrun.py --pardnn-execute`` and
+        ``benchmarks/bench_overhead.py --runtime``: timings, speedup,
+        segment/transfer counters, output drift, and measured-vs-
+        predicted per-device peak bytes.
+        """
+        import time
+
+        import jax
+
+        def _timed(runtime):
+            t0 = time.perf_counter()
+            out = self.execute(*args, devices=devices,
+                               device_map=device_map, runtime=runtime,
+                               **kwargs)
+            jax.block_until_ready(out)
+            return out, time.perf_counter() - t0
+
+        out_i, interp_s = _timed("interpret")
+        out_c, first_s = _timed("compiled")
+        best = float("inf")
+        for _ in range(max(int(reps), 1)):
+            out_c, dt = _timed("compiled")
+            best = min(best, dt)
+        rt = dict(self.report.runtime)
+        drift = 0.0
+        for a, b in zip(jax.tree_util.tree_leaves(out_c),
+                        jax.tree_util.tree_leaves(out_i)):
+            a = np.asarray(a, dtype=np.float64)
+            b = np.asarray(b, dtype=np.float64)
+            if a.size:
+                drift = max(drift, float(np.max(np.abs(a - b))))
+        predicted = [float(x) for x in self.peak_mem]
+        measured = list(rt.get("peak_live_bytes", []))
+        return {
+            "interpreter_s": interp_s,
+            "compiled_first_call_s": first_s,
+            "compiled_s": best,
+            "speedup": interp_s / best if best > 0 else float("inf"),
+            "compile_s": rt.get("compile_seconds", 0.0),
+            "num_segments": rt.get("num_segments", 0),
+            "segments_per_device": rt.get("segments_per_device", []),
+            "transfers": rt.get("transfers", 0),
+            "transfer_bytes": rt.get("transfer_bytes", 0.0),
+            "freed_buffers": rt.get("freed_buffers", 0),
+            "output_drift": drift,
+            "predicted_peak_bytes": predicted,
+            "measured_peak_bytes": measured,
+            "measured_over_predicted": [
+                (m / p if p else None)
+                for m, p in zip(measured, predicted)],
+        }
 
     # -- bridges ------------------------------------------------------------
     def to_pipeline_stages(self, layer_costs, layer_mem, act_bytes: float,
@@ -469,5 +595,5 @@ def partition(traced_or_graph: TracedModel | CostGraph,
 __all__ = [
     "trace", "partition", "TracedModel", "DeviceSpec", "PartitionPlan",
     "PlanReport", "PlanValidationError", "PardnnOptions",
-    "PLAN_SCHEMA_VERSION",
+    "PLAN_SCHEMA_VERSION", "RUNTIMES",
 ]

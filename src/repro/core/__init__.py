@@ -1,7 +1,13 @@
-"""ParDNN core: the paper's computational-graph partitioning algorithm."""
+"""ParDNN core: the paper's computational-graph partitioning algorithm.
+
+The execution layer (``executor``/``segments``/``runtime``) is imported
+lazily by the facade — it drags in jax, which the numpy-only
+partitioning path must not require at import time.
+"""
 from .costmodel import DeviceModel, TPU_V5E, V100
 from .emulator import (Schedule, emulate, emulate_scalar, emulate_vectorized,
                        resolve_engine)
+from .errors import PlanValidationError
 from .fenwick import Fenwick, MaxPrefixTree
 from .graph import CostGraph, Placement, random_dag, NORMAL, RESIDUAL, REF
 from .memops import (IncrementalMemoryTracker, MemoryProfile, compute_profile,
@@ -19,6 +25,6 @@ __all__ = [
     "MemoryProfile", "compute_profile", "compute_profile_scalar",
     "compute_profile_vectorized", "memory_potentials",
     "IncrementalMemoryTracker",
-    "PardnnOptions", "pardnn_partition",
+    "PardnnOptions", "pardnn_partition", "PlanValidationError",
     "Slicing", "slice_graph", "Mapping", "map_clusters", "glb_map",
 ]

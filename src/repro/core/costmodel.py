@@ -15,6 +15,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 TPU_V5E_PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
 TPU_V5E_HBM_BW = 819e9            # bytes/s per chip
 TPU_V5E_ICI_BW = 50e9             # bytes/s per link
@@ -49,6 +51,13 @@ class DeviceModel:
     def comm_seconds(self, nbytes: float) -> float:
         return self.link_latency + nbytes / self.link_bw
 
+    def transfer_seconds(self, nbytes: float) -> float:
+        """Alias of :meth:`comm_seconds` — the segment runtime's name for
+        the cost of one cross-device tensor transfer (alpha + bytes/bw).
+        Both the tracer's per-edge comm annotation and the runtime's
+        transfer accounting go through this one model."""
+        return self.comm_seconds(nbytes)
+
     @property
     def usable_hbm(self) -> float:
         return self.hbm_bytes * self.mem_fraction
@@ -61,5 +70,4 @@ V100 = DeviceModel("v100-sxm3", V100_PEAK_FLOPS, V100_HBM_BW,
 
 
 def dtype_bytes(dtype) -> int:
-    import numpy as np
     return np.dtype(dtype).itemsize

@@ -1,0 +1,14 @@
+"""Shared exception types for the partitioning/execution core.
+
+``PlanValidationError`` lives here (not in ``repro.api``) so that the
+execution layer — ``core.executor``, ``core.segments``,
+``core.runtime`` — can raise it on malformed placements without
+importing the facade. ``repro.api`` re-exports it, so
+``repro.PlanValidationError`` remains the public name.
+"""
+from __future__ import annotations
+
+
+class PlanValidationError(ValueError):
+    """A plan artifact failed schema/fingerprint/integrity validation,
+    or a placement cannot be realized on the given devices."""

@@ -4,18 +4,33 @@ The paper emits a placement file consumed by TensorFlow's executor. Our
 JAX equivalent replays the traced node-level program on real devices:
 every node's primitive runs on the device its ParDNN cluster was mapped
 to, inputs crossing clusters are explicitly ``jax.device_put`` —
-faithful op-level model parallelism. Used at small scale (CPU host
-devices in tests) to validate that a placement computes exactly what the
-un-partitioned program computes.
+faithful op-level model parallelism.
+
+Two engines realize a placement:
+
+* this module's :func:`execute` — the op-by-op *interpreter*: one
+  primitive bind per node, every intermediate kept alive. Slow, but a
+  bit-exact executable specification of the semantics; the reference
+  the compiled path is pinned against.
+* ``core.runtime.CompiledRuntime`` — the production *segment runtime*:
+  the placed program is cut into maximal same-device segments
+  (``core.segments``), each compiled once with ``jax.jit``, with
+  liveness-driven buffer freeing between segments.
+
+Both consume the same :class:`TracedProgram`, which since the segment
+runtime carries a liveness table (``consumers`` / ``output_nodes``)
+computed at trace time.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .errors import PlanValidationError
 
 
 @dataclass
@@ -27,24 +42,87 @@ class TracedProgram:
     out_slots: list[tuple[int, int] | None]
     out_tree: Any
     in_tree_example: Any
+    # liveness table (computed at trace time; see ``compute_liveness``):
+    # consumers[p] — sorted program-node ids that read any output of p;
+    # output_nodes — producers referenced by out_slots (never freeable).
+    consumers: dict[int, tuple[int, ...]] | None = field(default=None)
+    output_nodes: frozenset[int] | None = field(default=None)
+
+    def liveness(self) -> tuple[dict[int, tuple[int, ...]], frozenset[int]]:
+        """The (consumers, output_nodes) table, computing it on demand for
+        programs built before tracing recorded liveness."""
+        if self.consumers is None or self.output_nodes is None:
+            self.consumers, self.output_nodes = compute_liveness(self)
+        return self.consumers, self.output_nodes
+
+    def last_consumer(self, nid: int) -> int:
+        """Highest-id program node reading ``nid``'s output, or -1. Node
+        ids are a topological order, so this is the last consumer under
+        any schedule that respects the id order."""
+        consumers, _ = self.liveness()
+        cs = consumers.get(nid)
+        return int(cs[-1]) if cs else -1
+
+
+def compute_liveness(prog: TracedProgram
+                     ) -> tuple[dict[int, tuple[int, ...]], frozenset[int]]:
+    """Build the consumers / output-nodes liveness table from the
+    recorded program (the executable definition the trace-time table is
+    pinned to)."""
+    consumers: dict[int, set[int]] = {}
+    for nid, (_, _, inputs) in prog.program.items():
+        for inp in inputs:
+            if inp[0] == "slot":
+                consumers.setdefault(inp[1], set()).add(nid)
+    table = {p: tuple(sorted(cs)) for p, cs in consumers.items()}
+    outputs = frozenset(s[0] for s in prog.out_slots if s is not None)
+    return table, outputs
+
+
+def validate_device_count(assignment: np.ndarray | None,
+                          devices: list | None) -> None:
+    """A placement must name a real device for every PE it uses.
+
+    Raises :class:`PlanValidationError` when the plan has more PEs than
+    devices — silently aliasing PEs onto the same device (the old
+    ``% len(devices)`` wraparound) voids the plan's memory guarantees.
+    Callers that *want* device reuse must pass an explicitly expanded
+    device list (e.g. via ``PartitionPlan.execute(device_map=...)``).
+    """
+    if assignment is None or devices is None:
+        return
+    if len(assignment) == 0:
+        return
+    max_pe = int(np.max(assignment))
+    if max_pe >= len(devices):
+        raise PlanValidationError(
+            f"placement uses {max_pe + 1} PEs but only {len(devices)} "
+            f"devices were given — refusing to alias PEs onto shared "
+            f"devices implicitly (that voids the plan's per-device "
+            f"memory guarantees). Pass an explicit device_map (e.g. "
+            f"device_map=[0]*{max_pe + 1} to fold onto one device) or "
+            f"run with more devices.")
 
 
 def execute(prog: TracedProgram, assignment: np.ndarray | None,
             devices: list | None, *args, **kwargs):
-    """Execute the traced program under a placement.
+    """Execute the traced program under a placement, op by op.
 
     ``assignment[node] -> pe``; ``devices[pe]`` the jax device. With
     ``assignment=None`` everything runs on the default device (reference
-    mode)."""
+    mode). Every intermediate stays alive until the call returns — this
+    is the all-live baseline the segment runtime's refcount scheduler is
+    measured against."""
     flat_args = jax.tree_util.tree_leaves((args, kwargs))
     if len(flat_args) != len(prog.input_nodes):
         raise ValueError(
             f"expected {len(prog.input_nodes)} leaves, got {len(flat_args)}")
+    validate_device_count(assignment, devices)
 
     def dev_of(nid: int):
         if assignment is None or devices is None:
             return None
-        return devices[int(assignment[nid]) % len(devices)]
+        return devices[int(assignment[nid])]
 
     vals: dict[int, Any] = {}
     for nid, cval in prog.const_nodes:

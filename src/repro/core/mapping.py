@@ -27,7 +27,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .fenwick import Fenwick, LevelIndex
-from .graph import CostGraph
+from .graph import CostGraph, ranges_index
 from .slicing import Slicing
 
 
@@ -52,8 +52,41 @@ def _cluster_span(g: CostGraph, tl: np.ndarray, comp: np.ndarray,
     return float(start), float(end)
 
 
+def _cluster_edge_index(g: CostGraph, cluster) -> tuple:
+    """Flat CSR gathers for a cluster's incident edges: the neighbor and
+    weight arrays of all out-edges then all in-edges of its nodes — the
+    vectorized replacement for ``for u in cluster: adj[u]`` loops."""
+    cl = np.asarray(cluster, dtype=np.int64)
+    indptr_out, dst, w_out = g.csr_out()
+    indptr_in, src, w_in = g.csr_in()
+    oi, _ = ranges_index(indptr_out, cl)
+    ii, _ = ranges_index(indptr_in, cl)
+    return dst[oi], w_out[oi], src[ii], w_in[ii]
+
+
 def _cluster_comm(g: CostGraph, in_sc: np.ndarray, cluster: list[int]) -> float:
     """comm(sc): total communication of edges with exactly one end in sc."""
+    dst, w_out, src, w_in = _cluster_edge_index(g, cluster)
+    return float(np.sum(w_out, where=~in_sc[dst])
+                 + np.sum(w_in, where=~in_sc[src]))
+
+
+def _comm_per_pe(g: CostGraph, assignment: np.ndarray, cluster: list[int],
+                 k: int) -> np.ndarray:
+    """Communication between sc and nodes currently assigned to each pe."""
+    dst, w_out, src, w_in = _cluster_edge_index(g, cluster)
+    pe = np.concatenate([assignment[dst], assignment[src]])
+    w = np.concatenate([w_out, w_in])
+    mask = pe >= 0
+    return np.bincount(pe[mask], weights=w[mask], minlength=k)[:k] \
+        .astype(np.float64)
+
+
+def _cluster_comm_scalar(g: CostGraph, in_sc: np.ndarray,
+                         cluster: list[int]) -> float:
+    """Reference implementation of :func:`_cluster_comm` (python edge
+    loops) — kept as the executable spec the CSR gather is pinned to
+    by ``tests/test_engine_equivalence.py``."""
     tot = 0.0
     for u in cluster:
         for v, c in g.out_edges[u]:
@@ -65,9 +98,9 @@ def _cluster_comm(g: CostGraph, in_sc: np.ndarray, cluster: list[int]) -> float:
     return tot
 
 
-def _comm_per_pe(g: CostGraph, assignment: np.ndarray, cluster: list[int],
-                 k: int) -> np.ndarray:
-    """Communication between sc and nodes currently assigned to each pe."""
+def _comm_per_pe_scalar(g: CostGraph, assignment: np.ndarray,
+                        cluster: list[int], k: int) -> np.ndarray:
+    """Reference implementation of :func:`_comm_per_pe`."""
     out = np.zeros(k)
     for u in cluster:
         for v, c in g.out_edges[u]:

@@ -1,0 +1,361 @@
+"""Compiled segment runtime — executes a placed program at device speed.
+
+Where ``core.executor.execute`` replays the traced program one primitive
+at a time (the bit-exact reference), this runtime lowers the placement
+into the shape related systems (Tofu, Tarnawski et al.) execute: per-
+device compiled subprograms with explicit transfers.
+
+* Each :class:`~repro.core.segments.Segment` becomes one ``jax.jit``
+  callable compiled exactly once (AOT via ``lower().compile()`` on the
+  first call, so compile time is accounted separately from run time).
+* Cross-segment values live in a slot environment with **reference
+  counts** derived from the trace-time liveness table: when the last
+  consuming segment of a value has run, its buffer is dropped — live
+  memory tracks the plan's predicted per-device profile instead of the
+  whole graph (the interpreter's all-live behaviour).
+* Cross-device reads become explicit ``jax.device_put`` transfer ops,
+  counted (count/bytes/modelled seconds) in :class:`RuntimeStats`.
+* Segment inputs that die at their segment (``Segment.dead_inputs``)
+  are donated to XLA so the output can reuse the input buffer.
+
+The runtime is pinned bit-equal to the interpreter and the
+un-partitioned program by ``tests/test_runtime.py``.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .costmodel import DeviceModel
+from .errors import PlanValidationError
+from .executor import TracedProgram, validate_device_count
+from .segments import Segment, SegmentSchedule, Slot, cut_segments
+
+
+@dataclass
+class RuntimeStats:
+    """Counters from building/running a :class:`CompiledRuntime`."""
+    num_segments: int = 0
+    segments_per_device: list = field(default_factory=list)
+    num_transfer_edges: int = 0        # static cross-device slot reads
+    compile_seconds: float = 0.0       # cumulative across calls
+    calls: int = 0
+    # per-call counters (the last call's values):
+    transfers: int = 0                 # executed device_put copies
+    transfer_bytes: float = 0.0
+    transfer_seconds_modeled: float = 0.0
+    execute_seconds: float = 0.0       # compile excluded
+    freed_buffers: int = 0
+    peak_live_bytes: list = field(default_factory=list)   # per device
+    resident_bytes: list = field(default_factory=list)    # inputs+consts
+
+    def to_dict(self) -> dict:
+        return {
+            "num_segments": int(self.num_segments),
+            "segments_per_device": [int(x) for x in
+                                    self.segments_per_device],
+            "num_transfer_edges": int(self.num_transfer_edges),
+            "transfers": int(self.transfers),
+            "transfer_bytes": float(self.transfer_bytes),
+            "transfer_seconds_modeled": float(self.transfer_seconds_modeled),
+            "compile_seconds": float(self.compile_seconds),
+            "execute_seconds": float(self.execute_seconds),
+            "calls": int(self.calls),
+            "freed_buffers": int(self.freed_buffers),
+            "peak_live_bytes": [float(x) for x in self.peak_live_bytes],
+            "resident_bytes": [float(x) for x in self.resident_bytes],
+        }
+
+
+def _nbytes(v: Any) -> int:
+    nb = getattr(v, "nbytes", None)
+    return int(nb) if nb is not None else 0
+
+
+def _make_segment_fn(prog: TracedProgram, seg: Segment):
+    """Build the python callable replaying ``seg``'s nodes; ``jax.jit``
+    of this function is the segment's compiled subprogram."""
+    input_slots = seg.inputs
+
+    def fn(*invals):
+        env: dict[Slot, Any] = dict(zip(input_slots, invals))
+        local: dict[int, Any] = {}
+
+        def read(src: int, idx: int):
+            if src in local:
+                v = local[src]
+                return v[idx] if isinstance(v, tuple) else v
+            return env[(src, idx)]
+
+        for nid in seg.nodes:
+            prim, params, inputs = prog.program[nid]
+            vals = [inp[1] if inp[0] == "lit" else read(inp[1], inp[2])
+                    for inp in inputs]
+            if prim == "__scan_slice__":
+                out = vals[0][params["index"]]
+            elif prim == "__scan_stack__":
+                out = jnp.stack(vals)
+            else:
+                out = prim.bind(*vals, **params)
+                if prim.multiple_results:
+                    out = tuple(out)
+            local[nid] = out
+        return tuple(read(src, idx) for src, idx in seg.outputs)
+
+    return fn
+
+
+class CompiledRuntime:
+    """Execute a placed :class:`TracedProgram` as jitted segments.
+
+    Args:
+        prog: recorded program (``trace(..., record=True)``).
+        assignment: node -> pe (None: single-device reference mode).
+        devices: concrete jax devices, one per pe — must cover every pe
+            the assignment uses (no silent aliasing; expand the list
+            explicitly to share devices).
+        donate: donate dead segment inputs to XLA (default True).
+        device_model: optional :class:`DeviceModel` used to price
+            transfers (``transfer_seconds``) into the stats.
+
+    The instance is reusable: segments compile on the first call and are
+    cached; subsequent calls only pay execution.
+    """
+
+    def __init__(self, prog: TracedProgram, assignment: np.ndarray | None,
+                 devices: list | None, *, donate: bool = True,
+                 device_model: DeviceModel | None = None):
+        if devices is None:
+            devices = [jax.devices()[0]]
+        devices = list(devices)
+        validate_device_count(assignment, devices)
+        self.prog = prog
+        self.assignment = assignment
+        self.devices = devices
+        self.donate = donate
+        self.device_model = device_model
+        self.schedule: SegmentSchedule = cut_segments(
+            prog, assignment, k=len(devices))
+        self.stats = RuntimeStats(
+            num_segments=self.schedule.num_segments,
+            segments_per_device=self.schedule.segments_per_device(),
+            num_transfer_edges=self.schedule.num_transfer_edges)
+        self._jits: list[Any] = []
+        self._donate_sets: list[frozenset[int]] = []
+        _, output_nodes = prog.liveness()
+        prog_nodes = set(prog.program)
+        for seg in self.schedule.segments:
+            fn = _make_segment_fn(prog, seg)
+            dn = self._effective_donations(seg, prog_nodes,
+                                           output_nodes) if donate else ()
+            self._donate_sets.append(frozenset(dn))
+            self._jits.append(jax.jit(fn, donate_argnums=dn))
+        self._compiled: dict[int, Any] = {}
+        # consts are placed once and pinned for the runtime's lifetime
+        self._const_vals: dict[int, Any] = {}
+        for nid, cval in prog.const_nodes:
+            self._const_vals[nid] = jax.device_put(
+                cval, self._dev_of(nid))
+        # static index: exported slots per producer (for O(deg) freeing)
+        # and boundary slots fed by graph inputs/consts
+        self._slots_by_producer: dict[int, list[Slot]] = {}
+        self._root_slots: list[Slot] = []
+        roots = set(self._const_vals) | set(prog.input_nodes)
+        seen_root: set[Slot] = set()
+        for seg in self.schedule.segments:
+            for slot in seg.outputs:
+                self._slots_by_producer.setdefault(slot[0], []).append(slot)
+            for slot in seg.inputs:
+                if slot[0] in roots and slot not in seen_root:
+                    seen_root.add(slot)
+                    self._root_slots.append(slot)
+        for slot in prog.out_slots:
+            if slot is not None and slot[0] in roots \
+                    and slot not in seen_root:
+                seen_root.add(slot)
+                self._root_slots.append(slot)
+
+    # ------------------------------------------------------------------
+    def _effective_donations(self, seg: Segment, prog_nodes: set,
+                             output_nodes: frozenset) -> tuple[int, ...]:
+        """``Segment.dead_inputs`` assumes a cross-pe read materializes a
+        fresh copy. When the concrete device list aliases pes onto the
+        same physical device (``device_map=[0]*k``), ``jax.device_put``
+        is a no-copy alias — donating it would delete the buffer the
+        slot environment (or the pinned const cache) still references.
+        Mask those positions back to the same-device intermediate rule:
+        donate only values whose last reader is this segment."""
+        seg_dev = self.devices[seg.device]
+        transfer_pos = set(seg.transfer_inputs)
+        out = []
+        for pos in seg.dead_inputs:
+            src = seg.inputs[pos][0]
+            if pos in transfer_pos and self._dev_of(src) is seg_dev:
+                if not (src in prog_nodes and src not in output_nodes
+                        and self.schedule.last_consumer_seg.get(src)
+                        == seg.sid):
+                    continue
+            out.append(pos)
+        return tuple(out)
+
+    def _dev_of(self, nid: int):
+        pe = 0 if self.assignment is None else int(self.assignment[nid])
+        return self.devices[pe]
+
+    def _pe_of(self, nid: int) -> int:
+        return 0 if self.assignment is None else int(self.assignment[nid])
+
+    # ------------------------------------------------------------------
+    def __call__(self, *args, **kwargs):
+        prog, sched = self.prog, self.schedule
+        flat_args = jax.tree_util.tree_leaves((args, kwargs))
+        if len(flat_args) != len(prog.input_nodes):
+            raise ValueError(f"expected {len(prog.input_nodes)} leaves, "
+                             f"got {len(flat_args)}")
+        t_start = time.perf_counter()
+        k = len(self.devices)
+        live = np.zeros(k, dtype=np.float64)
+        peak = np.zeros(k, dtype=np.float64)
+        freed = 0
+        refcount = dict(sched.node_refcount)
+        self.stats.transfers = 0
+        self.stats.transfer_bytes = 0.0
+        self.stats.transfer_seconds_modeled = 0.0
+
+        def alloc(pe: int, nb: float) -> None:
+            live[pe] += nb
+            if live[pe] > peak[pe]:
+                peak[pe] = live[pe]
+
+        # inputs/consts are resident for the whole call (the paper's
+        # res_ns): committed copies on their assigned devices
+        env: dict[Slot, Any] = {}
+        node_vals: dict[int, Any] = {}
+        for nid, cv in self._const_vals.items():
+            node_vals[nid] = cv
+            alloc(self._pe_of(nid), _nbytes(cv))
+        for nid, a in zip(prog.input_nodes, flat_args):
+            v = jax.device_put(a, self._dev_of(nid))
+            node_vals[nid] = v
+            alloc(self._pe_of(nid), _nbytes(v))
+        resident = live.copy()
+        for slot in self._root_slots:
+            env[slot] = node_vals[slot[0]]
+
+        # transferred copies, one per (slot, target pe), live until their
+        # last reader on that device donates them or the source is freed
+        xfer_cache: dict[tuple[Slot, int], Any] = {}
+        cache_by_src: dict[int, list[tuple[Slot, int]]] = {}
+
+        compile_s = 0.0
+        for seg in sched.segments:
+            dev = self.devices[seg.device]
+            transfer_pos = set(seg.transfer_inputs)
+            donate_set = self._donate_sets[seg.sid]
+            dying_copy_bytes = 0.0      # donated copies die inside exe
+            invals = []
+            for pos, slot in enumerate(seg.inputs):
+                v = env[slot]
+                if pos in transfer_pos \
+                        and self._dev_of(slot[0]) is not dev:
+                    # cross-pe reads on *aliased* devices are no-copy
+                    # no-ops — only real copies count as transfers
+                    key = (slot, seg.device)
+                    cached = xfer_cache.get(key)
+                    if cached is not None:
+                        v = cached
+                        if pos in donate_set:      # last reader here
+                            xfer_cache.pop(key)
+                            dying_copy_bytes += _nbytes(v)
+                    else:
+                        nb = _nbytes(v)
+                        v = jax.device_put(v, dev)
+                        self.stats.transfers += 1
+                        self.stats.transfer_bytes += nb
+                        if self.device_model is not None:
+                            self.stats.transfer_seconds_modeled += \
+                                self.device_model.transfer_seconds(nb)
+                        alloc(seg.device, nb)
+                        if pos in donate_set:
+                            dying_copy_bytes += nb
+                        else:
+                            xfer_cache[key] = v
+                            cache_by_src.setdefault(slot[0], []).append(key)
+                invals.append(v)
+            exe = self._compiled.get(seg.sid)
+            if exe is None:
+                t0 = time.perf_counter()
+                with warnings.catch_warnings():
+                    # CPU backends may decline donation; that is a
+                    # performance hint, not an error
+                    warnings.filterwarnings(
+                        "ignore", message=".*donated.*",
+                        category=UserWarning)
+                    exe = self._jits[seg.sid].lower(*invals).compile()
+                compile_s += time.perf_counter() - t0
+                self._compiled[seg.sid] = exe
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore", message=".*donated.*",
+                                        category=UserWarning)
+                outs = exe(*invals)
+            if not invals:
+                # no committed inputs to infer placement from: pin the
+                # outputs to the segment's device explicitly
+                outs = tuple(jax.device_put(o, dev) for o in outs)
+            for slot, v in zip(seg.outputs, outs):
+                env[slot] = v
+                alloc(seg.device, _nbytes(v))
+            live[seg.device] -= dying_copy_bytes
+            # liveness-driven freeing: drop values whose last consuming
+            # segment has now run (plus their cached transfer copies)
+            for src in {s[0] for s in seg.inputs}:
+                if src not in refcount:
+                    continue
+                refcount[src] -= 1
+                if refcount[src] != 0:
+                    continue
+                for key in cache_by_src.pop(src, ()):
+                    v = xfer_cache.pop(key, None)
+                    if v is not None:
+                        live[key[1]] -= _nbytes(v)
+                        freed += 1
+                if src not in node_vals:
+                    pe = self._pe_of(src)
+                    for slot in self._slots_by_producer.get(src, ()):
+                        v = env.pop(slot, None)
+                        if v is not None:
+                            live[pe] -= _nbytes(v)
+                            freed += 1
+
+        outs = []
+        for slot in prog.out_slots:
+            outs.append(None if slot is None else env[slot])
+        result = jax.tree_util.tree_unflatten(prog.out_tree, outs)
+        # sync before reading the clock: under async dispatch the wall
+        # time up to here is dispatch time, not execution time
+        jax.block_until_ready([o for o in outs if o is not None])
+        self.stats.compile_seconds += compile_s
+        self.stats.execute_seconds = (time.perf_counter() - t_start
+                                      - compile_s)
+        self.stats.calls += 1
+        self.stats.freed_buffers = freed
+        self.stats.peak_live_bytes = [float(x) for x in peak]
+        self.stats.resident_bytes = [float(x) for x in resident]
+        return result
+
+
+def execute_compiled(prog: TracedProgram, assignment: np.ndarray | None,
+                     devices: list | None, *args,
+                     device_model: DeviceModel | None = None, **kwargs):
+    """One-shot convenience: build a :class:`CompiledRuntime` and call it.
+    Returns ``(result, runtime)`` so callers can read the stats or reuse
+    the compiled segments."""
+    rt = CompiledRuntime(prog, assignment, devices,
+                         device_model=device_model)
+    return rt(*args, **kwargs), rt

@@ -108,6 +108,11 @@ class _Tracer:
         # node -> (primitive, params, inputs); inputs: ("slot", nid, idx) or ("lit", v)
         self.program: dict[int, tuple] = {}
         self.n_outputs: dict[int, int] = {}
+        # vars bound to literal values (a pjit/scan body returning a
+        # constant, a literal threaded through a call boundary): they
+        # have no graph node, but the recorded program must still feed
+        # consumers the actual value — not a None placeholder
+        self.lits: dict[Any, Any] = {}
 
     def _edge(self, src: int, dst: int, nbytes: float) -> None:
         self.g.add_edge(src, dst, comm=self.dev.comm_seconds(nbytes))
@@ -124,15 +129,22 @@ class _Tracer:
                     inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
                     inner_env: dict[Any, Slot] = {}
                     for iv, ov in zip(inner.invars, eqn.invars):
-                        if not isinstance(ov, jcore.Literal) and ov in env:
+                        if isinstance(ov, jcore.Literal):
+                            self.lits[iv] = ov.val
+                        elif ov in env:
                             inner_env[iv] = env[ov]
+                        elif ov in self.lits:
+                            self.lits[iv] = self.lits[ov]
                     out_env = self.trace_jaxpr(inner, inner_env)
                     for ov_eqn, ov_inner in zip(eqn.outvars, inner.outvars):
                         if isinstance(ov_inner, jcore.Literal):
+                            self.lits[ov_eqn] = ov_inner.val
                             continue
                         slot = out_env.get(ov_inner)
                         if slot is not None:
                             env[ov_eqn] = slot
+                        elif ov_inner in self.lits:
+                            self.lits[ov_eqn] = self.lits[ov_inner]
                     continue
             if name == "scan":
                 self._trace_scan(eqn, env)
@@ -153,7 +165,9 @@ class _Tracer:
                     continue
                 slot = env.get(v)
                 if slot is None:
-                    rec_inputs.append(("lit", None))
+                    # a literal-bound var (see self.lits) or a genuinely
+                    # untraced value (None — preserved old behaviour)
+                    rec_inputs.append(("lit", self.lits.get(v)))
                     continue
                 rec_inputs.append(("slot", slot[0], slot[1]))
                 if slot[0] not in seen_srcs:
@@ -191,6 +205,11 @@ class _Tracer:
             return env.get(ov)
 
         carry_slots = [outer_slot(v) for v in carry_in]
+        # literal-valued carries (initial outer Literal, or a body that
+        # returns a constant): value threaded alongside the slot list
+        carry_lits: list = [
+            v.val if isinstance(v, jcore.Literal) else self.lits.get(v)
+            for v in carry_in]
         # xs slicing nodes (per unrolled iteration, when recording we must
         # actually slice; without recording we link to the stacked array)
         xs_slots = [outer_slot(v) for v in xs_in]
@@ -204,10 +223,17 @@ class _Tracer:
                 s = outer_slot(ov)
                 if s is not None:
                     inner_env[iv] = s
-            for iv, s in zip(inner.invars[num_consts:num_consts + num_carry],
-                             carry_slots):
+                elif isinstance(ov, jcore.Literal):
+                    self.lits[iv] = ov.val
+                elif ov in self.lits:
+                    self.lits[iv] = self.lits[ov]
+            for iv, s, lv in zip(
+                    inner.invars[num_consts:num_consts + num_carry],
+                    carry_slots, carry_lits):
                 if s is not None:
                     inner_env[iv] = s
+                elif lv is not None:
+                    self.lits[iv] = lv
             for j, (iv, s) in enumerate(zip(inner_xs_vars, xs_slots)):
                 if s is None:
                     continue
@@ -230,12 +256,16 @@ class _Tracer:
                 for nid in range(before, len(self.g.comp)):
                     self.g.comp[nid] *= cost_mult
             new_carry = []
+            new_carry_lits = []
             for ov_inner in inner.outvars[:num_carry]:
                 if isinstance(ov_inner, jcore.Literal):
                     new_carry.append(None)
+                    new_carry_lits.append(ov_inner.val)
                 else:
                     new_carry.append(out_env.get(ov_inner))
+                    new_carry_lits.append(self.lits.get(ov_inner))
             carry_slots = new_carry
+            carry_lits = new_carry_lits
             for j, ov_inner in enumerate(inner.outvars[num_carry:]):
                 ys_collect[j].append(
                     None if isinstance(ov_inner, jcore.Literal)
@@ -309,4 +339,8 @@ def trace_cost_graph(fn: Callable, *example_args,
                              jax.eval_shape(fn, *example_args,
                                             **example_kwargs)),
                          in_tree_example=(example_args, example_kwargs))
+    # Populate the liveness/last-consumer table at trace time (one
+    # definition: executor.compute_liveness) so the segment runtime's
+    # refcounts and jit donation sets never re-walk the program.
+    prog.liveness()
     return g, prog

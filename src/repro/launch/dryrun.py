@@ -253,9 +253,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
 
 
 def run_pardnn_plan(arch: str, devices: int, out_dir: str,
-                    mem_cap_mb: float | None = None) -> dict:
+                    mem_cap_mb: float | None = None,
+                    execute: bool = False) -> dict:
     """Trace the arch's reduced train step and emit a versioned
-    :class:`repro.api.PartitionPlan` artifact (JSON header + npz)."""
+    :class:`repro.api.PartitionPlan` artifact (JSON header + npz).
+
+    With ``execute=True`` the placement is additionally *run* through
+    both execution engines (this process forces 512 host devices, so
+    every pe gets a real device): the op-by-op interpreter and the
+    compiled segment runtime — and the result records the
+    interpreter-vs-compiled speedup plus measured-vs-predicted peak
+    bytes per device, the execution-side counterpart of the
+    memory_analysis numbers the mesh cells above report."""
     import repro
     from repro.configs import reduced
     from repro.models import init_params, loss_fn, smoke_batch
@@ -263,15 +272,20 @@ def run_pardnn_plan(arch: str, devices: int, out_dir: str,
     cfg = reduced(get_config(arch))
     params = init_params(cfg, jax.random.PRNGKey(0))
     batch = smoke_batch(cfg)
-    traced = repro.trace(lambda p: loss_fn(cfg, p, batch)[0], params)
+    traced = repro.trace(lambda p: loss_fn(cfg, p, batch)[0], params,
+                         record=execute)
     plan = repro.partition(
         traced, devices=devices,
         memory=mem_cap_mb * 1e6 if mem_cap_mb else None,
         meta={"arch": arch, "config": "reduced", "source": "dryrun"})
     path = os.path.join(out_dir, f"{arch}__pardnn_k{devices}.plan.json")
+    res = {"arch": arch, "ops": plan.n, "path": path,
+           "makespan_s": plan.makespan, "feasible": plan.feasible}
+    if execute:
+        res["runtime"] = plan.benchmark_runtimes(params, reps=1)
+        plan.meta["runtime"] = res["runtime"]
     plan.save(path)
-    return {"arch": arch, "ops": plan.n, "path": path,
-            "makespan_s": plan.makespan, "feasible": plan.feasible}
+    return res
 
 
 def cell_name(arch, shape, mesh_kind, tag=""):
@@ -296,6 +310,10 @@ def main():
                          "facade instead of lower/compile cells")
     ap.add_argument("--pardnn-devices", type=int, default=4)
     ap.add_argument("--pardnn-mem-cap-mb", type=float, default=None)
+    ap.add_argument("--pardnn-execute", action="store_true",
+                    help="also run the plan through both execution "
+                         "engines and report interpreter-vs-compiled "
+                         "speedup + measured-vs-predicted peak bytes")
     args = ap.parse_args()
 
     if args.pardnn:
@@ -305,11 +323,28 @@ def main():
             t0 = time.perf_counter()
             try:
                 res = run_pardnn_plan(a, args.pardnn_devices, args.out,
-                                      args.pardnn_mem_cap_mb)
+                                      args.pardnn_mem_cap_mb,
+                                      execute=args.pardnn_execute)
                 print(f"[OK] {a}: {res['ops']} ops, makespan "
                       f"{res['makespan_s'] * 1e3:.3f} ms, "
                       f"feasible={res['feasible']} -> {res['path']} "
                       f"({time.perf_counter() - t0:.1f}s)", flush=True)
+                rt = res.get("runtime")
+                if rt:
+                    mvp = " ".join(
+                        f"d{i}:{m / 1e6:.1f}/{p / 1e6:.1f}MB"
+                        for i, (m, p) in enumerate(zip(
+                            rt["measured_peak_bytes"],
+                            rt["predicted_peak_bytes"])))
+                    print(f"     runtime: {rt['num_segments']} segments, "
+                          f"{rt['transfers']} transfers, compiled "
+                          f"{rt['compiled_s'] * 1e3:.1f} ms vs interpreter "
+                          f"{rt['interpreter_s'] * 1e3:.0f} ms "
+                          f"({rt['speedup']:.0f}x); measured/predicted "
+                          f"peaks {mvp}", flush=True)
+                    if rt["output_drift"] > 1e-5:
+                        print(f"     WARNING: output drift "
+                              f"{rt['output_drift']:.3g}", flush=True)
             except Exception as e:
                 print(f"[FAIL] {a}: {type(e).__name__}: {e}", flush=True)
         return

@@ -160,18 +160,46 @@ def test_load_rejects_wrong_format(tmp_path):
 def test_execute_matches_unpartitioned_reference(traced):
     t, params, x = traced
     plan = repro.partition(t, devices=2)
-    out = plan.execute(params, x)
     ref = _mlp(params, x)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+    # both runtimes, folded onto the host's single device explicitly
+    for runtime in repro.RUNTIMES:
+        out = plan.execute(params, x, device_map=[0] * plan.k,
+                           runtime=runtime)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5)
+    # the compiled path records its stats in the report
+    r = plan.report.runtime
+    assert r["num_segments"] >= 1 and r["calls"] >= 1
+    assert len(r["peak_live_bytes"]) == plan.k
+
+
+def test_execute_refuses_silent_pe_aliasing(traced):
+    """More PEs than devices must raise, not silently wrap around."""
+    t, params, x = traced
+    k = len(jax.devices()) + 1
+    plan = repro.partition(t, devices=k)
+    if int(np.max(plan.assignment)) < len(jax.devices()):
+        pytest.skip("partition did not use the extra PE")
+    with pytest.raises(PlanValidationError, match="device_map"):
+        plan.execute(params, x)
+    with pytest.raises(PlanValidationError, match="device_map"):
+        plan.execute(params, x, device_map=[0])  # too short
 
 
 def test_loaded_plan_executes_after_bind(tmp_path, traced):
     t, params, x = traced
     path = repro.partition(t, devices=2).save(str(tmp_path / "p.json"))
     loaded = repro.PartitionPlan.load(path, traced=t)  # bind at load
-    out = loaded.execute(params, x)
+    out = loaded.execute(params, x, device_map=[0, 0])
     np.testing.assert_allclose(np.asarray(out), np.asarray(_mlp(params, x)),
                                rtol=1e-5)
+
+
+def test_execute_rejects_unknown_runtime(traced):
+    t, params, x = traced
+    plan = repro.partition(t, devices=2)
+    with pytest.raises(ValueError, match="unknown runtime"):
+        plan.execute(params, x, device_map=[0, 0], runtime="warp-drive")
 
 
 def test_execute_without_program_raises(tmp_path, traced):

@@ -156,6 +156,40 @@ def test_vectorized_handles_empty_and_trivial_graphs():
     assert p2.peak.shape == (1,)
 
 
+@pytest.mark.parametrize("seed", SEEDS[:25])
+def test_mapping_csr_helpers_match_scalar(seed):
+    """The CSR-gather `_cluster_comm`/`_comm_per_pe` must agree with the
+    python edge-loop references, and `map_clusters` must produce the
+    identical assignment whichever pair drives it."""
+    import repro.core.mapping as M
+    from repro.core.slicing import slice_graph
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(20, 400))
+    k = int(rng.integers(2, 7))
+    g = random_dag(n, avg_deg=float(rng.uniform(0.5, 4.0)), seed=seed)
+    s = slice_graph(g, k)
+    a = rng.integers(-1, k, size=n).astype(np.int64)
+    for cl in s.secondaries[:8]:
+        in_sc = np.zeros(n, dtype=bool)
+        in_sc[cl] = True
+        assert np.isclose(M._cluster_comm(g, in_sc, cl),
+                          M._cluster_comm_scalar(g, in_sc, cl),
+                          rtol=1e-12, atol=1e-12)
+        assert np.allclose(M._comm_per_pe(g, a, cl, k),
+                           M._comm_per_pe_scalar(g, a, cl, k),
+                           rtol=1e-12, atol=1e-12)
+    m_vec = M.map_clusters(g, s)
+    orig = (M._cluster_comm, M._comm_per_pe)
+    M._cluster_comm, M._comm_per_pe = (M._cluster_comm_scalar,
+                                       M._comm_per_pe_scalar)
+    try:
+        m_ref = M.map_clusters(g, s)
+    finally:
+        M._cluster_comm, M._comm_per_pe = orig
+    assert np.array_equal(m_vec.assignment, m_ref.assignment)
+    assert m_vec.secondary_pe == m_ref.secondary_pe
+
+
 def test_vectorized_zero_cost_ties_terminate():
     """Zero-comp chains exercise the degenerate single-step fallback."""
     g = CostGraph()

@@ -1,0 +1,378 @@
+"""Compiled segment runtime: segment cutting, liveness, and equality
+against the op-by-op interpreter and the un-partitioned reference.
+
+Equality contract: identical dtype/shape and values equal to within a
+few float ulp (XLA fuses ops *within* a jitted segment, e.g.
+``mean(h**2)``, whose reduction rounding can differ from the eager
+interpreter's op-at-a-time execution by 1-2 ulp — the same slack any
+``jax.jit`` has against eager). Repeated calls of the same compiled
+runtime are pinned exactly equal (deterministic executables).
+
+In-process tests run on the default (single) device; multi-device
+behaviour runs in subprocesses with forced host devices (the device
+count must be fixed before jax initializes — same pattern as
+tests/test_multidevice.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pardnn_partition
+from repro.core.errors import PlanValidationError
+from repro.core.executor import compute_liveness, execute
+from repro.core.runtime import CompiledRuntime
+from repro.core.segments import cut_segments, device_topo_order
+from repro.core.tracing import trace_cost_graph
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 4, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def _mlp(params, x):
+    def layer(h, p):
+        w1, w2 = p
+        h = jnp.tanh(h @ w1) @ w2
+        return h, jnp.sum(h)
+    h, sums = jax.lax.scan(layer, x, params)
+    return jnp.mean(h ** 2) + jnp.sum(sums)
+
+
+def _multi(params, x):
+    """Multi-result pytree output: dict of scalars + an array."""
+    def layer(h, p):
+        w1, w2 = p
+        h = jnp.tanh(h @ w1) @ w2
+        return h, jnp.max(h)
+    h, maxes = jax.lax.scan(layer, x, params)
+    return {"loss": jnp.mean(h ** 2), "h": h, "maxes": maxes,
+            "x_through": x}
+
+
+def _example(L=4, D=16, H=32):
+    key = jax.random.PRNGKey(0)
+    params = (jax.random.normal(key, (L, D, H)) * 0.1,
+              jax.random.normal(key, (L, H, D)) * 0.1)
+    x = jax.random.normal(key, (3, D))
+    return params, x
+
+
+def assert_matches(actual, desired):
+    """dtype/shape exact; values within a few float32 ulp (see module
+    docstring for why exact bit-equality vs eager is not well-defined)."""
+    a, d = np.asarray(actual), np.asarray(desired)
+    assert a.dtype == d.dtype and a.shape == d.shape
+    np.testing.assert_allclose(a, d, rtol=2e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------- liveness
+def test_trace_records_liveness_table():
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    assert prog.consumers is not None and prog.output_nodes is not None
+    # the trace-time table must equal the recomputed-from-program one
+    cons, outs = compute_liveness(prog)
+    assert prog.consumers == cons
+    assert prog.output_nodes == outs
+    # consumer ids ascend and last_consumer is their max
+    for p, cs in cons.items():
+        assert list(cs) == sorted(cs)
+        assert prog.last_consumer(p) == cs[-1]
+    assert prog.last_consumer(10 ** 9) == -1
+
+
+# ---------------------------------------------------------------- segments
+def test_cut_segments_covers_program_acyclically():
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 3)
+    sched = cut_segments(prog, p.assignment, k=3)
+    seen = []
+    pos = {}
+    for seg in sched.segments:
+        assert all(int(p.assignment[n]) == seg.device for n in seg.nodes)
+        for n in seg.nodes:
+            pos[n] = seg.sid
+        seen.extend(seg.nodes)
+    assert sorted(seen) == sorted(prog.program)     # exact cover
+    # dataflow only points backwards across segments (acyclic schedule)
+    for seg in sched.segments:
+        for src, _ in seg.inputs:
+            if src in pos:
+                assert pos[src] < seg.sid
+    # adjacent segments differ in device (maximality of runs)
+    for a, b in zip(sched.segments, sched.segments[1:]):
+        assert a.device != b.device
+
+
+def test_device_affine_order_is_topological():
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 4)
+    order = device_topo_order(prog, p.assignment)
+    rank = {n: i for i, n in enumerate(order)}
+    for nid, (_, _, inputs) in prog.program.items():
+        for inp in inputs:
+            if inp[0] == "slot" and inp[1] in rank:
+                assert rank[inp[1]] < rank[nid]
+    # and it coalesces devices at least as well as raw id order
+    def runs(seq):
+        return sum(1 for i, n in enumerate(seq)
+                   if i == 0 or p.assignment[n] != p.assignment[seq[i - 1]])
+    assert runs(order) <= runs(sorted(prog.program))
+
+
+def test_segment_refcounts_match_consumption():
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 3)
+    sched = cut_segments(prog, p.assignment, k=3)
+    seg_of = {n: s.sid for s in sched.segments for n in s.nodes}
+    for src, rc in sched.node_refcount.items():
+        consuming = {s.sid for s in sched.segments
+                     if any(sl[0] == src for sl in s.inputs)}
+        expect = len(consuming) + (1 if src in prog.output_nodes else 0)
+        assert rc == expect, (src, rc, expect)
+        if consuming:
+            assert sched.last_consumer_seg[src] == max(consuming)
+    del seg_of
+
+
+def test_cut_segments_rejects_too_few_devices():
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 4)
+    if int(np.max(p.assignment[sorted(prog.program)])) < 1:
+        pytest.skip("partition collapsed to one pe")
+    with pytest.raises(PlanValidationError, match="PEs"):
+        cut_segments(prog, p.assignment, k=1)
+
+
+# ---------------------------------------------------- executor strictness
+def test_interpreter_rejects_pe_wraparound():
+    """A plan with more PEs than devices must raise, not silently alias
+    PEs via modulo (the old ``% len(devices)`` behaviour)."""
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 4)
+    if int(np.max(p.assignment)) < 1:
+        pytest.skip("partition collapsed to one pe")
+    with pytest.raises(PlanValidationError, match="device_map"):
+        execute(prog, p.assignment, [jax.devices()[0]], params, x)
+    # an explicitly expanded device list is the sanctioned aliasing path
+    devs = [jax.devices()[0]] * 4
+    out = execute(prog, p.assignment, devs, params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_mlp(params, x)),
+                               rtol=1e-5)
+
+
+def test_runtime_rejects_pe_wraparound():
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 4)
+    if int(np.max(p.assignment)) < 1:
+        pytest.skip("partition collapsed to one pe")
+    with pytest.raises(PlanValidationError):
+        CompiledRuntime(prog, p.assignment, [jax.devices()[0]])
+
+
+# ------------------------------------------------------- single-device eq
+def test_compiled_reference_mode_matches():
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    ref = _mlp(params, x)
+    rt = CompiledRuntime(prog, None, None)
+    out = rt(params, x)
+    assert_matches(out, ref)
+    # second call reuses compiled segments and is exactly deterministic
+    out2 = rt(params, x)
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(out))
+    assert rt.stats.calls == 2
+    assert rt.stats.num_segments == 1
+    assert rt.stats.transfers == 0
+
+
+def test_compiled_matches_interpreter_aliased_devices():
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 3)
+    devs = [jax.devices()[0]] * 3
+    ref = execute(prog, p.assignment, devs, params, x)
+    rt = CompiledRuntime(prog, p.assignment, devs)
+    out = rt(params, x)
+    assert_matches(out, ref)
+    assert rt.stats.num_segments >= 1
+    # aliased devices: cross-pe reads are no-copy no-ops, so no
+    # executed transfers are counted (the static edge count remains)
+    assert rt.stats.transfers == 0
+
+
+def test_compiled_multi_result_pytree_outputs():
+    params, x = _example()
+    g, prog = trace_cost_graph(_multi, params, x, record=True)
+    p = pardnn_partition(g, 2)
+    devs = [jax.devices()[0]] * 2
+    ref = _multi(params, x)
+    out = CompiledRuntime(prog, p.assignment, devs)(params, x)
+    assert set(out) == set(ref)
+    for key in ref:
+        assert_matches(out[key], ref[key])
+
+
+def test_compiled_without_donation_matches():
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 2)
+    devs = [jax.devices()[0]] * 2
+    ref = _mlp(params, x)
+    out = CompiledRuntime(prog, p.assignment, devs, donate=False)(params, x)
+    assert_matches(out, ref)
+
+
+def test_aliased_devices_do_not_donate_shared_buffers():
+    """On an aliased device_map, device_put is a no-copy alias; donating
+    a multi-consumer 'transfer' slot would delete a buffer a later
+    segment still reads (regression: RuntimeError: Array has been
+    deleted)."""
+    def f(x):
+        a = x + 1.0
+        b = a * 2.0
+        c = b + a
+        d = a + c
+        return d
+
+    x = jnp.arange(8.0)
+    g, prog = trace_cost_graph(f, x, record=True)
+    asn = np.zeros(g.n, dtype=np.int64)
+    for i, nid in enumerate(sorted(prog.program)):
+        asn[nid] = i % 2          # 'a' becomes a multi-consumer transfer
+    dev0 = jax.devices()[0]
+    rt = CompiledRuntime(prog, asn, [dev0, dev0])
+    for _ in range(2):            # consts/env must survive across calls
+        assert_matches(rt(x), f(x))
+    # aliased cross-pe reads execute no real copies
+    assert rt.stats.transfers == 0
+    assert rt.stats.num_transfer_edges > 0
+
+
+def test_runtime_frees_buffers_below_all_live_baseline():
+    """The refcount scheduler must keep peak live bytes strictly below
+    the interpreter's all-live total on a chain-structured program."""
+    def chain(x):
+        for i in range(24):
+            x = jnp.tanh(x + float(i))
+        return jnp.sum(x)
+
+    x = jnp.ones((64, 64), jnp.float32)
+    g, prog = trace_cost_graph(chain, x, record=True)
+    # alternate devices down the chain to force many segment boundaries
+    a = np.zeros(g.n, dtype=np.int64)
+    ids = sorted(prog.program)
+    for i, nid in enumerate(ids):
+        a[nid] = i % 2
+    devs = [jax.devices()[0]] * 2
+    rt = CompiledRuntime(prog, a, devs)
+    out = rt(x)
+    assert_matches(out, chain(x))
+    assert rt.stats.freed_buffers > 0
+    # all-live: every intermediate held simultaneously (24 x 16 KiB);
+    # the runtime holds input + a couple of chain links per device
+    all_live = 24 * 64 * 64 * 4
+    measured = sum(rt.stats.peak_live_bytes)
+    assert measured < all_live, (measured, all_live)
+
+
+# --------------------------------------------------------- multi-device
+def test_compiled_bit_equal_on_four_host_devices():
+    run_py("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import pardnn_partition
+        from repro.core.executor import execute
+        from repro.core.runtime import CompiledRuntime
+        from repro.core.tracing import trace_cost_graph
+        assert len(jax.devices()) == 4
+
+        def mlp(params, x):
+            def layer(h, p):
+                w1, w2 = p
+                h = jnp.tanh(h @ w1) @ w2
+                return h, jnp.sum(h)
+            h, sums = jax.lax.scan(layer, x, params)
+            return jnp.mean(h ** 2) + jnp.sum(sums)
+
+        key = jax.random.PRNGKey(0)
+        L, D, H = 6, 16, 32
+        params = (jax.random.normal(key, (L, D, H)) * 0.1,
+                  jax.random.normal(key, (L, H, D)) * 0.1)
+        x = jax.random.normal(key, (3, D))
+        g, prog = trace_cost_graph(mlp, params, x, record=True)
+        ref = mlp(params, x)
+        for k in (2, 3, 4):
+            p = pardnn_partition(g, k)
+            devs = jax.devices()[:k]
+            out_i = execute(prog, p.assignment, devs, params, x)
+            rt = CompiledRuntime(prog, p.assignment, devs)
+            out_c = rt(params, x)
+            np.testing.assert_allclose(np.asarray(out_c),
+                                       np.asarray(out_i),
+                                       rtol=2e-6, atol=1e-8, err_msg=str(k))
+            np.testing.assert_allclose(np.asarray(out_c), np.asarray(ref),
+                                       rtol=2e-6, atol=1e-8, err_msg=str(k))
+            # repeated compiled calls are exactly deterministic
+            out_c2 = rt(params, x)
+            assert np.array_equal(np.asarray(out_c2), np.asarray(out_c)), k
+        print('OK')
+    """)
+
+
+def test_facade_runtime_switch_on_four_host_devices():
+    run_py("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, jax.numpy as jnp, numpy as np
+        import repro
+
+        def multi(params, x):
+            def layer(h, p):
+                w1, w2 = p
+                h = jnp.tanh(h @ w1) @ w2
+                return h, jnp.max(h)
+            h, maxes = jax.lax.scan(layer, x, params)
+            return {'loss': jnp.mean(h ** 2), 'h': h, 'maxes': maxes}
+
+        key = jax.random.PRNGKey(1)
+        params = (jax.random.normal(key, (4, 8, 16)) * 0.1,
+                  jax.random.normal(key, (4, 16, 8)) * 0.1)
+        x = jax.random.normal(key, (2, 8))
+        traced = repro.trace(multi, params, x, record=True)
+        plan = repro.partition(traced, devices=4)
+        ref = multi(params, x)
+        out_c = plan.execute(params, x, runtime='compiled')
+        out_i = plan.execute(params, x, runtime='interpret')
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(out_c[k]),
+                                       np.asarray(out_i[k]),
+                                       rtol=2e-6, atol=1e-8)
+            np.testing.assert_allclose(np.asarray(out_c[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=2e-6, atol=1e-8)
+        r = plan.report.runtime
+        assert r['num_segments'] >= 1 and r['calls'] == 1
+        assert len(r['peak_live_bytes']) == 4
+        print('OK segments', r['num_segments'], 'transfers', r['transfers'])
+    """)
