@@ -14,7 +14,7 @@ import numpy as np
 from repro.core import pardnn_partition
 from repro.core.modelgraphs import trn, word_rnn
 
-from .common import emit, timer
+from .common import emit, timed
 
 
 def _peak_single(gen, batch) -> float:
@@ -50,8 +50,7 @@ def run(full: bool = False, ks=(1, 2, 4)) -> dict:
         b1 = max_batch(gen, 1, cap, candidates)
         row = {1: b1}
         for k in ks[1:]:
-            with timer() as t:
-                bk = max_batch(gen, k, cap, candidates)
+            bk, t = timed(lambda: max_batch(gen, k, cap, candidates))
             row[k] = bk
             ideal_dp = k * b1
             mult = bk / max(ideal_dp, 1)

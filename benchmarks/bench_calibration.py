@@ -1,0 +1,141 @@
+"""Calibration loop benchmark: how much does measuring buy?
+
+Runs the full predict→measure→calibrate→re-predict loop on a reduced
+arch (CPU-friendly) and reports how the Step-2 emulator's per-stage
+predictions score against the compiled runtime's measured segment
+times, *before* and *after* calibration:
+
+1. trace the training-step loss (record=True) with the analytic cost
+   model; partition; ``accuracy_report`` → the un-calibrated MAPE.
+2. ``repro.calibrate``: profile the program's op signatures + the
+   device links, fit the device model, save the CalibrationProfile.
+3. ``TracedModel.annotate``: re-annotate the graph from measurements;
+   re-partition; ``accuracy_report`` → the calibrated MAPE.
+
+Results land in ``BENCH_calibration.json`` (``--out``) so CI records
+the loop's trajectory. The headline number is
+``mape_improvement`` = analytic stage-MAPE / calibrated stage-MAPE.
+
+    PYTHONPATH=src python benchmarks/bench_calibration.py --tiny \
+        --out BENCH_calibration.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+try:                                    # package mode (benchmarks.run)
+    from .common import emit
+except ImportError:                     # standalone script mode
+    from common import emit
+
+
+def _pct(v) -> str:
+    return "n/a" if v is None else f"{v:.1f}%"
+
+
+def run(tiny: bool = False, k: int = 2, arch: str = "repro-lm-100m",
+        out_path: str | None = None, profile_path: str | None = None
+        ) -> dict:
+    import jax
+    import numpy as np
+
+    import repro
+    from repro.configs import get_config, reduced
+    from repro.models import init_params, loss_fn, smoke_batch
+    from repro.profiling import MeasureSpec, quick_spec
+
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, batch=2, seq=16) if tiny \
+        else smoke_batch(cfg, batch=2, seq=32)
+    spec = quick_spec(reps=2, max_attempts=2) if tiny else \
+        MeasureSpec(warmup=1, reps=5, max_attempts=3)
+    device_map = repro.fold_device_map(k)
+    reps = 2 if tiny else 4
+
+    # 1. analytic baseline -------------------------------------------------
+    traced = repro.trace(lambda p: loss_fn(cfg, p, batch)[0], params,
+                         record=True)
+    plan0 = repro.partition(traced, devices=k,
+                            meta={"arch": arch, "source": "bench_calib"})
+    acc0 = plan0.accuracy_report(params, device_map=device_map, reps=reps)
+    emit(f"calibration/{arch}/analytic_mape",
+         acc0["measured_wall_s"] * 1e6,
+         f"{_pct(acc0['stage_mape_pct'])} over "
+         f"{acc0['stages_scored']} stages")
+
+    # 2. measure + fit -----------------------------------------------------
+    profile = repro.calibrate(
+        traced, spec=spec,
+        max_signatures=40 if tiny else None,
+        meta={"arch": arch, "tiny": bool(tiny)}, save=profile_path)
+    emit(f"calibration/{arch}/signatures", len(profile.ops),
+         profile.summary())
+
+    # 3. annotate, re-partition, re-score ----------------------------------
+    comp_before = float(np.sum(traced.graph.comp))
+    traced.annotate(profile)
+    comp_after = float(np.sum(traced.graph.comp))
+    plan1 = repro.partition(traced, devices=k,
+                            meta={"arch": arch,
+                                  "source": "bench_calib+annotated"})
+    acc1 = plan1.accuracy_report(params, device_map=device_map, reps=reps)
+    # stage_mape_pct is None when no stage cleared the clock-noise
+    # floor (sub-2us segments on a very small arch)
+    improvement = None
+    if acc0["stage_mape_pct"] and acc1["stage_mape_pct"]:
+        improvement = acc0["stage_mape_pct"] / acc1["stage_mape_pct"]
+    emit(f"calibration/{arch}/calibrated_mape",
+         acc1["measured_wall_s"] * 1e6,
+         f"{_pct(acc1['stage_mape_pct'])} "
+         + (f"({improvement:.1f}x better than analytic)"
+            if improvement is not None else "(no scorable stages)"))
+
+    res = {
+        "arch": arch, "tiny": bool(tiny), "k": k,
+        "graph_nodes": int(traced.n),
+        "op_signatures": len(profile.ops),
+        "transfer_points": len(profile.transfers),
+        "fitted": profile.fitted,
+        "device_fingerprint": profile.device_fingerprint,
+        "comp_total_s_analytic": comp_before,
+        "comp_total_s_calibrated": comp_after,
+        "analytic": {kk: acc0[kk] for kk in
+                     ("stage_mape_pct", "device_mape_pct", "num_stages",
+                      "stages_scored", "predicted_makespan_s",
+                      "measured_wall_s", "makespan_ratio")},
+        "calibrated": {kk: acc1[kk] for kk in
+                       ("stage_mape_pct", "device_mape_pct", "num_stages",
+                        "stages_scored", "predicted_makespan_s",
+                        "measured_wall_s", "makespan_ratio")},
+        "mape_improvement": improvement,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"wrote {out_path}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--arch", default="repro-lm-100m")
+    ap.add_argument("--devices", type=int, default=2)
+    ap.add_argument("--out", default=None,
+                    help="write results JSON (e.g. BENCH_calibration.json)")
+    ap.add_argument("--profile-out", default=None,
+                    help="save the CalibrationProfile artifact here")
+    args = ap.parse_args()
+    run(tiny=args.tiny, k=args.devices, arch=args.arch,
+        out_path=args.out, profile_path=args.profile_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ from repro.core import compute_profile, emulate, pardnn_partition
 from repro.core.tracing import trace_cost_graph
 from repro.models import init_params, loss_fn
 
-from .common import emit, timer
+from .common import emit, timed
 
 
 def run(full: bool = False) -> dict:
@@ -31,8 +31,7 @@ def run(full: bool = False) -> dict:
         return loss_fn(cfg, p, b)[0]
 
     grad_fn = jax.grad(fn)
-    with timer() as t:
-        g = trace_cost_graph(grad_fn, params, batch)
+    g, t = timed(lambda: trace_cost_graph(grad_fn, params, batch))
     assign = np.zeros(g.n, dtype=np.int64)
     sched = emulate(g, assign, 1)
     prof = compute_profile(g, assign, sched, 1)

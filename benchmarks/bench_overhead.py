@@ -36,9 +36,9 @@ from repro.core import pardnn_partition           # noqa: E402
 from repro.core.modelgraphs import trn, wrn       # noqa: E402
 
 try:                                    # package mode (benchmarks.run)
-    from .common import emit, timer
+    from .common import emit, timed
 except ImportError:                     # standalone script mode
-    from common import emit, timer
+    from common import emit, timed
 
 
 def run(full: bool = False, k: int = 16) -> dict:
@@ -58,8 +58,7 @@ def run(full: bool = False, k: int = 16) -> dict:
         g = gen()
         p0 = pardnn_partition(g, k)
         cap = float(np.max(p0.peak_mem)) * 0.85
-        with timer() as t:
-            p = pardnn_partition(g, k, mem_caps=cap / 0.9)
+        p, t = timed(lambda: pardnn_partition(g, k, mem_caps=cap / 0.9))
         moved_fracs.append(p.stats["moved_frac"])
         emit(f"overhead/{name}/n{g.n}", t["us"],
              f"{t['s']:.2f}s (paper bound: <=120s for 190k nodes)")
@@ -89,17 +88,14 @@ def run_runtime(tiny: bool = False, k: int = 4,
     batch = smoke_batch(cfg, batch=2, seq=32) if tiny \
         else smoke_batch(cfg, batch=4, seq=64)
 
-    with timer() as t_trace:
-        traced = repro.trace(lambda p: loss_fn(cfg, p, batch)[0],
-                             params, record=True)
-    with timer() as t_part:
-        plan = repro.partition(traced, devices=k,
-                               meta={"arch": arch, "source": "bench"})
+    traced, t_trace = timed(
+        lambda: repro.trace(lambda p: loss_fn(cfg, p, batch)[0],
+                            params, record=True))
+    plan, t_part = timed(
+        lambda: repro.partition(traced, devices=k,
+                                meta={"arch": arch, "source": "bench"}))
 
-    devices = jax.devices()
-    device_map = None
-    if len(devices) < k:
-        device_map = [i % len(devices) for i in range(k)]
+    device_map = repro.fold_device_map(k)
 
     bench = plan.benchmark_runtimes(params, device_map=device_map,
                                     reps=3 if tiny else 5)

@@ -12,7 +12,7 @@ import numpy as np
 from repro.core import pardnn_partition
 from repro.core.modelgraphs import char_crn, trn, word_rnn
 
-from .common import emit, timer
+from .common import emit, timed
 
 
 def run(full: bool = False, ks=(1, 2, 4, 8)) -> dict:
@@ -32,8 +32,7 @@ def run(full: bool = False, ks=(1, 2, 4, 8)) -> dict:
         for k in ks:
             bk = b1 * k * 4          # ParDNN enables larger-than-DP batch
             g = gen(bk)
-            with timer() as t:
-                p = pardnn_partition(g, k)
+            p, t = timed(lambda: pardnn_partition(g, k))
             thr = bk / p.makespan
             sp = thr / thr1
             emit(f"fig4b/{name}/k{k}/speedup", t["us"],

@@ -10,7 +10,7 @@ from __future__ import annotations
 from repro.core import pardnn_partition
 from repro.core.baselines import linear_clustering
 
-from .common import emit, small_paper_models, timer
+from .common import emit, small_paper_models, timed
 
 
 def run(full: bool = False, ks=(2, 4, 8, 16)) -> dict:
@@ -18,10 +18,8 @@ def run(full: bool = False, ks=(2, 4, 8, 16)) -> dict:
     for name, gen in small_paper_models(full).items():
         g = gen()
         for k in ks:
-            with timer() as tp:
-                p = pardnn_partition(g, k)
-            with timer() as tl:
-                lc = linear_clustering(g, k)
+            p, tp = timed(lambda: pardnn_partition(g, k))
+            lc, tl = timed(lambda: linear_clustering(g, k))
             ratio = p.makespan / lc.makespan
             tratio = tl["s"] / max(tp["s"], 1e-9)
             emit(f"fig5b/{name}/k{k}/makespan_ratio", tp["us"],

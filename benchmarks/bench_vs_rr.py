@@ -8,7 +8,7 @@ from __future__ import annotations
 from repro.core import PardnnOptions, pardnn_partition
 from repro.core.baselines import round_robin
 
-from .common import emit, small_paper_models, timer
+from .common import emit, small_paper_models, timed
 
 
 def run(full: bool = False, k: int = 4) -> dict:
@@ -16,8 +16,7 @@ def run(full: bool = False, k: int = 4) -> dict:
     speedups, refine_gains = [], []
     for name, gen in small_paper_models(full).items():
         g = gen()
-        with timer() as t:
-            p = pardnn_partition(g, k)
+        p, t = timed(lambda: pardnn_partition(g, k))
         rr = round_robin(g, k)
         p_nr = pardnn_partition(g, k, options=PardnnOptions(refine=False))
         sp_rr = rr.makespan / p.makespan

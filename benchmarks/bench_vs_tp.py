@@ -18,7 +18,7 @@ from repro.core.costmodel import V100
 from repro.core.graph import RESIDUAL
 from repro.core.modelgraphs import trn
 
-from .common import emit, timer
+from .common import emit, timed
 
 
 def mesh_tf_makespan(g, k: int) -> float:
@@ -40,8 +40,7 @@ def run(full: bool = False, ks=(4, 8)) -> dict:
     out = {}
     for k in ks:
         g = trn(layers=6, seq=32, heads=8, batch=4)
-        with timer() as t:
-            p = pardnn_partition(g, k)
+        p, t = timed(lambda: pardnn_partition(g, k))
         m_tf = mesh_tf_makespan(g, k)
         ratio = p.makespan / m_tf
         emit(f"fig3a/trn/k{k}/pardnn_over_meshtf", t["us"],

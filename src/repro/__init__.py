@@ -14,11 +14,12 @@ Submodules (``repro.core``, ``repro.pipeline``, …) remain importable
 directly; attribute access on the package resolves lazily so that
 ``import repro.configs`` does not drag in the tracer or jax-heavy code.
 """
-_API = ("trace", "partition", "TracedModel", "DeviceSpec", "PartitionPlan",
-        "PlanReport", "PlanValidationError", "PardnnOptions",
-        "PLAN_SCHEMA_VERSION", "RUNTIMES")
+_API = ("trace", "partition", "calibrate", "fold_device_map",
+        "TracedModel", "DeviceSpec", "PartitionPlan", "PlanReport",
+        "PlanValidationError", "PardnnOptions", "PLAN_SCHEMA_VERSION",
+        "RUNTIMES")
 
-__all__ = list(_API) + ["api"]
+__all__ = list(_API) + ["api", "profiling"]
 
 
 def __getattr__(name):
@@ -28,6 +29,9 @@ def __getattr__(name):
         import importlib
         api = importlib.import_module(".api", __name__)
         return api if name == "api" else getattr(api, name)
+    if name == "profiling":
+        import importlib
+        return importlib.import_module(".profiling", __name__)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")
 
 

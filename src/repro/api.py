@@ -129,17 +129,110 @@ class TracedModel:
     def n(self) -> int:
         return self.graph.n
 
+    def annotate(self, profile) -> "TracedModel":
+        """Re-annotate this trace's cost graph from a
+        :class:`~repro.profiling.CalibrationProfile` (in place).
+
+        Node compute costs are replaced by the profile's *measured*
+        per-signature seconds where the signature was profiled, and by
+        the calibrated device model's roofline otherwise; edge comm
+        costs are re-priced through the fitted alpha–beta link model
+        (payload bytes are recovered exactly by inverting the original
+        model's ``comm_seconds``). Compute costs are then rescaled by
+        the profile's measured *fusion factor* — eager per-op timing
+        cannot see XLA fusion, so summed op costs overpredict compiled
+        segments by a graph-wide ratio the calibration measures
+        independently of any partition. The graph fingerprint changes —
+        existing plans for the un-annotated costs no longer validate
+        and must be re-partitioned, which is the point.
+        """
+        from .profiling.opbench import graph_signatures
+        g = self.graph
+        old = self.device_model
+        if old is None:
+            raise ValueError("annotate() needs the device model the "
+                             "trace was priced with (TracedModel."
+                             "device_model) to invert edge costs")
+        if g.op_flops is None or g.op_bytes is None:
+            raise ValueError("cost graph has no op_flops/op_bytes "
+                             "annotations — re-trace with repro.trace")
+        model = profile.device_model(base=old)
+        flops = np.asarray(g.op_flops, dtype=np.float64)
+        bts = np.asarray(g.op_bytes, dtype=np.float64)
+        comp = np.maximum(
+            flops / (model.peak_flops * model.flop_efficiency),
+            bts / model.hbm_bw)
+        measured = profile.op_seconds_by_signature()
+        if measured:
+            for i, sig in enumerate(graph_signatures(g)):
+                t = measured.get(sig)
+                if t is not None:
+                    comp[i] = t
+        # both the measured per-op seconds and the roofline fallback
+        # describe eager, unfused execution — rescale to what fused
+        # compiled segments actually achieve on this graph
+        comp *= float(getattr(profile, "fusion_factor", 1.0))
+        g.comp = comp
+        for adj in (g.out_edges, g.in_edges):
+            for u, edges in enumerate(adj):
+                adj[u] = [
+                    (v, model.comm_seconds(
+                        max(c - old.link_latency, 0.0) * old.link_bw))
+                    for v, c in edges]
+        g._invalidate()
+        self.device_model = model
+        self.fingerprint = g.fingerprint()
+        return self
+
+
+def _resolve_calibration(calibration):
+    """calibration= argument → CalibrationProfile | None. Accepts a
+    profile object, a path, or (when None) the ``REPRO_CALIBRATION``
+    environment variable pointing at a saved artifact. A profile whose
+    device fingerprint does not match this environment is applied but
+    *warned about* — measured costs do not transfer across hardware;
+    pass ``CalibrationProfile.load(path, expect_device=True)`` to make
+    the mismatch a hard error instead."""
+    if calibration is None:
+        calibration = os.environ.get("REPRO_CALIBRATION") or None
+    if calibration is None:
+        return None
+    from .profiling.artifact import (CalibrationProfile,
+                                     current_device_fingerprint)
+    if isinstance(calibration, str):
+        calibration = CalibrationProfile.load(calibration)
+    here = current_device_fingerprint()
+    if calibration.device_fingerprint != here:
+        import warnings
+        warnings.warn(
+            f"calibration profile was measured on "
+            f"{calibration.device_fingerprint!r} but this environment "
+            f"is {here!r} — measured costs may not transfer; "
+            f"re-run repro.calibrate on this hardware", stacklevel=3)
+    return calibration
+
 
 def trace(fn: Callable, *example_args, record: bool = False,
           dev: DeviceModel = TPU_V5E, max_scan_unroll: int = 64,
-          params_residual: bool = True, **example_kwargs) -> TracedModel:
+          params_residual: bool = True, calibration=None,
+          **example_kwargs) -> TracedModel:
     """Trace ``fn(*example_args)`` into a :class:`TracedModel`.
 
     With ``record=True`` the node-level program is captured as well, so
     the resulting plan can :meth:`~PartitionPlan.execute` on real
     devices. The graph fingerprint is computed here once and reused for
     every plan produced from this trace.
+
+    ``calibration`` (a :class:`~repro.profiling.CalibrationProfile`, a
+    path to a saved one, or — when unset — the ``REPRO_CALIBRATION``
+    env var) overlays measured device parameters on ``dev`` before
+    pricing, so the graph is annotated with calibrated costs from the
+    start; :meth:`TracedModel.annotate` additionally patches in the
+    per-op measured seconds afterwards.
     """
+    profile = _resolve_calibration(calibration)
+    if profile is not None:
+        dev = profile.device_model(base=dev)
     res = trace_cost_graph(fn, *example_args, dev=dev,
                            max_scan_unroll=max_scan_unroll,
                            params_residual=params_residual,
@@ -147,6 +240,27 @@ def trace(fn: Callable, *example_args, record: bool = False,
     g, prog = res if record else (res, None)
     return TracedModel(graph=g, program=prog, fingerprint=g.fingerprint(),
                        device_model=dev)
+
+
+def fold_device_map(k: int, devices=None) -> list[int] | None:
+    """pe -> device-index aliasing for running a ``k``-PE plan on fewer
+    devices (round-robin), or None when enough devices exist. The
+    explicit companion of the executor's refusal to wrap PEs silently:
+    ``plan.execute(..., device_map=fold_device_map(plan.k))``."""
+    if devices is None:
+        import jax
+        devices = jax.devices()
+    n = len(devices)
+    return None if n >= k else [i % n for i in range(k)]
+
+
+def calibrate(traced, *example_args, **kwargs):
+    """Measure real op/link costs and fit the device model — the facade
+    name for :func:`repro.profiling.run_calibration` (see there for the
+    full signature). Returns a
+    :class:`~repro.profiling.CalibrationProfile`."""
+    from .profiling import run_calibration
+    return run_calibration(traced, *example_args, **kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +286,9 @@ class PlanReport:
     # segments, transfers/bytes, compile/execute seconds, measured
     # per-device peak live bytes (next to the predicted peaks above)
     runtime: dict = field(default_factory=dict)
+    # predicted-vs-measured scorecard from accuracy_report(): per-stage
+    # (segment) MAPE, per-device MAPE, makespan error (repro.profiling)
+    accuracy: dict = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {"makespan_s": self.makespan_s,
@@ -180,7 +297,8 @@ class PlanReport:
                 "moved_nodes": self.moved_nodes,
                 "stage_seconds": self.stage_seconds,
                 "counters": self.counters,
-                "runtime": self.runtime}
+                "runtime": self.runtime,
+                "accuracy": self.accuracy}
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanReport":
@@ -190,7 +308,8 @@ class PlanReport:
                    moved_nodes=int(d["moved_nodes"]),
                    stage_seconds=dict(d.get("stage_seconds", {})),
                    counters=dict(d.get("counters", {})),
-                   runtime=dict(d.get("runtime", {})))
+                   runtime=dict(d.get("runtime", {})),
+                   accuracy=dict(d.get("accuracy", {})))
 
     @classmethod
     def from_placement(cls, p: Placement) -> "PlanReport":
@@ -447,21 +566,109 @@ class PartitionPlan:
         self.report.runtime = rt[1].stats.to_dict()
         return out
 
+    def accuracy_report(self, *args, devices=None, device_map=None,
+                        reps: int = 3, donate: bool = True,
+                        **kwargs) -> dict:
+        """Score the Step-2 emulator's predictions against the compiled
+        runtime's measurements — the closed predict→execute loop.
+
+        Runs the plan through the segment runtime in per-segment
+        profiling mode (``reps`` blocked passes, medians taken), runs
+        the emulator on the same placement, and compares stage by stage
+        (a *stage* = one compiled segment): predicted seconds (sum of
+        annotated node costs) vs measured wall seconds, as absolute
+        percentage error. The scorecard lands in
+        ``report.accuracy`` (serialized with the plan) and is returned.
+
+        A huge MAPE is not a bug — it is the measurement that tells you
+        the cost model is wrong for this hardware. Calibrate
+        (``repro.calibrate`` → :meth:`TracedModel.annotate`),
+        re-partition, and re-score to close the loop.
+        """
+        from .core.emulator import emulate
+        from .profiling.opbench import profile_segments
+
+        if self.traced is None or self.traced.program is None:
+            raise PlanValidationError(
+                "accuracy_report needs a bound trace recorded with "
+                "record=True (the plan must be executable)")
+        # ensure the compiled runtime exists (and reuse its cache); this
+        # call already runs the program end-to-end and pays compilation,
+        # so profile_segments can skip its own warmup pass
+        self.execute(*args, devices=devices, device_map=device_map,
+                     runtime="compiled", donate=donate, **kwargs)
+        rt = self._compiled_runtime[1]
+        prof = profile_segments(rt, *args, reps=reps, warmup=False,
+                                **kwargs)
+        g = self.traced.graph
+        comp = np.asarray(g.comp, dtype=np.float64)
+        segments = rt.schedule.segments
+        pred = np.asarray([float(np.sum(comp[list(s.nodes)]))
+                           for s in segments])
+        meas = np.asarray(prof["seconds"], dtype=np.float64)
+        disp = np.asarray(prof["dispersion"], dtype=np.float64)
+        ape = np.abs(pred - meas) / np.maximum(meas, 1e-12)
+        # score only stages/devices with measurable duration: sub-2us
+        # wall times are clock noise on every platform we run on. None
+        # (not NaN — the scorecard must stay valid JSON) when nothing
+        # clears the floor.
+        scored = meas > 2e-6
+        mape = float(np.mean(ape[scored]) * 100) if scored.any() else None
+        k = max(self.k, 1)
+        pred_dev = np.zeros(k)
+        meas_dev = np.zeros(k)
+        for s, p, m in zip(segments, pred, meas):
+            pred_dev[s.device] += p
+            meas_dev[s.device] += m
+        dev_scored = meas_dev > 2e-6
+        dev_ape = np.abs(pred_dev - meas_dev) / np.maximum(meas_dev, 1e-12)
+        sched = emulate(g, self.assignment, self.k)
+        wall = float(np.median(prof["wall_seconds"]))
+        result = {
+            "num_stages": len(segments),
+            "stages_scored": int(np.count_nonzero(scored)),
+            "reps": int(reps),
+            "per_stage": [
+                {"stage": int(s.sid), "device": int(s.device),
+                 "nodes": len(s.nodes), "predicted_s": float(p),
+                 "measured_s": float(m), "dispersion": float(d),
+                 "ape_pct": float(a * 100)}
+                for s, p, m, d, a in zip(segments, pred, meas, disp, ape)],
+            "stage_mape_pct": mape,
+            "per_device_ape_pct": [float(a * 100) if s else None
+                                   for a, s in zip(dev_ape, dev_scored)],
+            "devices_scored": int(np.count_nonzero(dev_scored)),
+            "device_mape_pct": (float(np.mean(dev_ape[dev_scored]) * 100)
+                                if dev_scored.any() else None),
+            "predicted_makespan_s": float(sched.makespan),
+            "measured_wall_s": wall,
+            "makespan_ratio": (wall / float(sched.makespan)
+                               if sched.makespan > 0 else None),
+            "cost_model": (self.traced.device_model.name
+                           if self.traced.device_model else None),
+        }
+        self.report.accuracy = result
+        return result
+
     def benchmark_runtimes(self, *args, devices=None, device_map=None,
                            reps: int = 3, **kwargs) -> dict:
         """Time both execution engines on this plan with the same inputs.
 
         One blocked interpreter run, one compiled run paying segment
-        compilation, then ``reps`` steady-state compiled runs (min
-        taken). Returns the comparison dict used by
-        ``launch/dryrun.py --pardnn-execute`` and
-        ``benchmarks/bench_overhead.py --runtime``: timings, speedup,
-        segment/transfer counters, output drift, and measured-vs-
-        predicted per-device peak bytes.
+        compilation, then the steady-state compiled path measured by
+        the robust estimator (:mod:`repro.profiling.measure` —
+        median-of-k with outlier rejection and noisy-window retries,
+        ``reps`` samples per attempt). Returns the comparison dict used
+        by ``launch/dryrun.py --pardnn-execute`` and
+        ``benchmarks/bench_overhead.py --runtime``: timings (with
+        sample dispersion), speedup, segment/transfer counters, output
+        drift, and measured-vs-predicted per-device peak bytes.
         """
         import time
 
         import jax
+
+        from .profiling.measure import MeasureSpec, measure_call
 
         def _timed(runtime):
             t0 = time.perf_counter()
@@ -473,10 +680,14 @@ class PartitionPlan:
 
         out_i, interp_s = _timed("interpret")
         out_c, first_s = _timed("compiled")
-        best = float("inf")
-        for _ in range(max(int(reps), 1)):
-            out_c, dt = _timed("compiled")
-            best = min(best, dt)
+        m = measure_call(
+            lambda: self.execute(*args, devices=devices,
+                                 device_map=device_map,
+                                 runtime="compiled", **kwargs),
+            spec=MeasureSpec(warmup=0, reps=max(int(reps), 2)),
+            sync=jax.block_until_ready)
+        out_c = m.result
+        best = m.seconds
         rt = dict(self.report.runtime)
         drift = 0.0
         for a, b in zip(jax.tree_util.tree_leaves(out_c),
@@ -491,6 +702,10 @@ class PartitionPlan:
             "interpreter_s": interp_s,
             "compiled_first_call_s": first_s,
             "compiled_s": best,
+            "compiled_dispersion": m.dispersion,
+            "compiled_samples": int(m.samples.size),
+            "timing_attempts": int(m.attempts),
+            "timing_noisy": bool(m.noisy),
             "speedup": interp_s / best if best > 0 else float("inf"),
             "compile_s": rt.get("compile_seconds", 0.0),
             "num_segments": rt.get("num_segments", 0),
@@ -593,7 +808,7 @@ def partition(traced_or_graph: TracedModel | CostGraph,
 
 
 __all__ = [
-    "trace", "partition", "TracedModel", "DeviceSpec", "PartitionPlan",
-    "PlanReport", "PlanValidationError", "PardnnOptions",
-    "PLAN_SCHEMA_VERSION", "RUNTIMES",
+    "trace", "partition", "calibrate", "fold_device_map", "TracedModel",
+    "DeviceSpec", "PartitionPlan", "PlanReport", "PlanValidationError",
+    "PardnnOptions", "PLAN_SCHEMA_VERSION", "RUNTIMES",
 ]

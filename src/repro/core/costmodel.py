@@ -62,6 +62,36 @@ class DeviceModel:
     def usable_hbm(self) -> float:
         return self.hbm_bytes * self.mem_fraction
 
+    def to_dict(self) -> dict:
+        return {"name": self.name, "peak_flops": self.peak_flops,
+                "hbm_bw": self.hbm_bw, "link_bw": self.link_bw,
+                "hbm_bytes": self.hbm_bytes,
+                "link_latency": self.link_latency,
+                "flop_efficiency": self.flop_efficiency,
+                "mem_fraction": self.mem_fraction}
+
+
+@dataclass(frozen=True)
+class CalibratedDeviceModel(DeviceModel):
+    """A :class:`DeviceModel` whose sustained parameters were *fitted
+    from measurements* (repro.profiling.calibrate) instead of guessed.
+
+    Same pricing interface — everything that consumes a DeviceModel
+    (tracer, emulator, runtime transfer accounting) works unchanged;
+    ``source`` records the CalibrationProfile's device fingerprint so a
+    plan's costs are traceable to the measurement run behind them.
+    """
+    source: str = ""                 # calibration device fingerprint
+
+    @classmethod
+    def from_base(cls, base: DeviceModel, *, source: str = "",
+                  **fitted) -> "CalibratedDeviceModel":
+        d = base.to_dict()
+        d.update({k: v for k, v in fitted.items() if v is not None})
+        if not d["name"].endswith("+calibrated"):
+            d["name"] += "+calibrated"
+        return cls(source=source, **d)
+
 
 TPU_V5E = DeviceModel("tpu-v5e", TPU_V5E_PEAK_FLOPS, TPU_V5E_HBM_BW,
                       TPU_V5E_ICI_BW, TPU_V5E_HBM_BYTES)

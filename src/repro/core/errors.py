@@ -12,3 +12,10 @@ from __future__ import annotations
 class PlanValidationError(ValueError):
     """A plan artifact failed schema/fingerprint/integrity validation,
     or a placement cannot be realized on the given devices."""
+
+
+class ProfileValidationError(PlanValidationError):
+    """A calibration-profile artifact failed schema/payload validation,
+    or was measured on a different device than it is being applied to
+    (``repro.profiling.artifact``). Subclasses PlanValidationError so
+    one except-clause guards both artifact kinds."""

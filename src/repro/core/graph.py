@@ -82,6 +82,12 @@ class CostGraph:
         self.in_edges: list[list[tuple[int, float]]] = []
         # ref_ns -> index of the variable node it mutates (colocation constraint)
         self.colocate_with: dict[int, int] = {}
+        # optional per-node *physical* annotations set by the tracer:
+        # FLOPs and bytes touched (in+out) — the raw quantities a
+        # calibrated device model re-prices comp(n) from without
+        # retracing (repro.profiling). None for graphs built by hand.
+        self.op_flops: np.ndarray | None = None
+        self.op_bytes: np.ndarray | None = None
         self._topo: np.ndarray | None = None
         # lazy vectorization caches (invalidated on mutation)
         self._flat: tuple | None = None      # (indptr, src, dst, w)

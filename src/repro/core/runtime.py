@@ -54,6 +54,10 @@ class RuntimeStats:
     freed_buffers: int = 0
     peak_live_bytes: list = field(default_factory=list)   # per device
     resident_bytes: list = field(default_factory=list)    # inputs+consts
+    # per-segment wall seconds of the last call — populated only when the
+    # runtime's profile_segments mode is on (blocks after every segment,
+    # trading pipelining for attributable timings; repro.profiling)
+    segment_seconds: list = field(default_factory=list)
 
     def to_dict(self) -> dict:
         return {
@@ -70,6 +74,7 @@ class RuntimeStats:
             "freed_buffers": int(self.freed_buffers),
             "peak_live_bytes": [float(x) for x in self.peak_live_bytes],
             "resident_bytes": [float(x) for x in self.resident_bytes],
+            "segment_seconds": [float(x) for x in self.segment_seconds],
         }
 
 
@@ -140,6 +145,10 @@ class CompiledRuntime:
         self.devices = devices
         self.donate = donate
         self.device_model = device_model
+        # per-segment profiling mode: block after every segment and
+        # record RuntimeStats.segment_seconds (repro.profiling.opbench
+        # flips this; off by default — blocking defeats async dispatch)
+        self.profile_segments = False
         self.schedule: SegmentSchedule = cut_segments(
             prog, assignment, k=len(devices))
         self.stats = RuntimeStats(
@@ -254,6 +263,7 @@ class CompiledRuntime:
         cache_by_src: dict[int, list[tuple[Slot, int]]] = {}
 
         compile_s = 0.0
+        seg_seconds: list[float] = []
         for seg in sched.segments:
             dev = self.devices[seg.device]
             transfer_pos = set(seg.transfer_inputs)
@@ -300,10 +310,14 @@ class CompiledRuntime:
                     exe = self._jits[seg.sid].lower(*invals).compile()
                 compile_s += time.perf_counter() - t0
                 self._compiled[seg.sid] = exe
+            t_seg = time.perf_counter() if self.profile_segments else 0.0
             with warnings.catch_warnings():
                 warnings.filterwarnings("ignore", message=".*donated.*",
                                         category=UserWarning)
                 outs = exe(*invals)
+            if self.profile_segments:
+                jax.block_until_ready(outs)
+                seg_seconds.append(time.perf_counter() - t_seg)
             if not invals:
                 # no committed inputs to infer placement from: pin the
                 # outputs to the segment's device explicitly
@@ -345,6 +359,7 @@ class CompiledRuntime:
                                       - compile_s)
         self.stats.calls += 1
         self.stats.freed_buffers = freed
+        self.stats.segment_seconds = seg_seconds
         self.stats.peak_live_bytes = [float(x) for x in peak]
         self.stats.resident_bytes = [float(x) for x in resident]
         return result

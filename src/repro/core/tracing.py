@@ -105,6 +105,12 @@ class _Tracer:
         self.dev = dev
         self.max_scan_unroll = max_scan_unroll
         self.record = record
+        # per-node physical annotations, parallel to g.comp: FLOPs and
+        # bytes touched (in+out). Attached to the finalized graph as
+        # op_flops/op_bytes so a calibrated device model (repro.profiling)
+        # can re-price comp(n) without retracing.
+        self.op_flops: list[float] = []
+        self.op_bytes: list[float] = []
         # node -> (primitive, params, inputs); inputs: ("slot", nid, idx) or ("lit", v)
         self.program: dict[int, tuple] = {}
         self.n_outputs: dict[int, int] = {}
@@ -113,6 +119,13 @@ class _Tracer:
         # have no graph node, but the recorded program must still feed
         # consumers the actual value — not a None placeholder
         self.lits: dict[Any, Any] = {}
+
+    def _node(self, comp: float, mem: float, ntype: int, name: str,
+              flops: float = 0.0, bytes_touched: float = 0.0) -> int:
+        nid = self.g.add_node(comp=comp, mem=mem, ntype=ntype, name=name)
+        self.op_flops.append(float(flops))
+        self.op_bytes.append(float(bytes_touched))
+        return nid
 
     def _edge(self, src: int, dst: int, nbytes: float) -> None:
         self.g.add_edge(src, dst, comm=self.dev.comm_seconds(nbytes))
@@ -155,8 +168,9 @@ class _Tracer:
                            if hasattr(getattr(v, "aval", None), "shape"))
             flops = _flops_of(eqn)
             comp = dev.compute_seconds(flops, in_bytes + out_bytes)
-            nid = g.add_node(comp=comp, mem=out_bytes, ntype=NORMAL,
-                             name=name)
+            nid = self._node(comp=comp, mem=out_bytes, ntype=NORMAL,
+                             name=name, flops=flops,
+                             bytes_touched=in_bytes + out_bytes)
             seen_srcs: set[int] = set()
             rec_inputs = []
             for v in eqn.invars:
@@ -241,8 +255,9 @@ class _Tracer:
                     # emit an explicit slice node: xs[it]
                     aval = iv.aval
                     nb = _aval_bytes(aval)
-                    nid = self.g.add_node(comp=0.0, mem=nb, ntype=NORMAL,
-                                          name=f"scan_slice_{it}")
+                    nid = self._node(comp=0.0, mem=nb, ntype=NORMAL,
+                                     name=f"scan_slice_{it}",
+                                     bytes_touched=nb)
                     self._edge(s[0], nid, nb)
                     self.program[nid] = ("__scan_slice__", {"index": it},
                                          [("slot", s[0], s[1])])
@@ -255,6 +270,8 @@ class _Tracer:
             if cost_mult > 1.0:
                 for nid in range(before, len(self.g.comp)):
                     self.g.comp[nid] *= cost_mult
+                    self.op_flops[nid] *= cost_mult
+                    self.op_bytes[nid] *= cost_mult
             new_carry = []
             new_carry_lits = []
             for ov_inner in inner.outvars[:num_carry]:
@@ -281,8 +298,8 @@ class _Tracer:
                 continue
             if self.record:
                 nb = _aval_bytes(ov.aval)
-                nid = self.g.add_node(comp=0.0, mem=nb, ntype=NORMAL,
-                                      name="scan_stack")
+                nid = self._node(comp=0.0, mem=nb, ntype=NORMAL,
+                                 name="scan_stack", bytes_touched=2 * nb)
                 for s in slots:
                     self._edge(s[0], nid, nb / max(len(slots), 1))
                 self.program[nid] = ("__scan_stack__", {},
@@ -313,18 +330,20 @@ def trace_cost_graph(fn: Callable, *example_args,
     input_nodes: list[int] = []
     const_nodes: list[tuple[int, Any]] = []
     for cv, cval in zip(closed.jaxpr.constvars, closed.consts):
-        nid = tr.g.add_node(comp=0.0, mem=_aval_bytes(cv.aval),
-                            ntype=RESIDUAL, name="const")
+        nid = tr._node(comp=0.0, mem=_aval_bytes(cv.aval),
+                       ntype=RESIDUAL, name="const")
         env[cv] = (nid, 0)
         const_nodes.append((nid, cval))
     for iv in closed.jaxpr.invars:
-        nid = tr.g.add_node(
+        nid = tr._node(
             comp=0.0, mem=_aval_bytes(iv.aval),
             ntype=RESIDUAL if params_residual else NORMAL, name="param")
         env[iv] = (nid, 0)
         input_nodes.append(nid)
     out_env = tr.trace_jaxpr(closed.jaxpr, env)
     g = tr.g.finalize()
+    g.op_flops = np.asarray(tr.op_flops, dtype=np.float64)
+    g.op_bytes = np.asarray(tr.op_bytes, dtype=np.float64)
     if not record:
         return g
     out_slots = []

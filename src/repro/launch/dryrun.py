@@ -20,6 +20,9 @@ Usage:
   python -m repro.launch.dryrun --list
   python -m repro.launch.dryrun --pardnn --arch gemma3-1b \
       --pardnn-devices 4                       # emit PartitionPlan files
+  python -m repro.launch.dryrun --calibrate --arch repro-lm-100m \
+      --pardnn-devices 4   # profile ops/links, fit + save a
+                           # CalibrationProfile, report stage MAPE
 Flags for §Perf iterations: --remat, --tag (variant label kept in the
 result file name so baselines are never overwritten).
 
@@ -288,6 +291,46 @@ def run_pardnn_plan(arch: str, devices: int, out_dir: str,
     return res
 
 
+def run_calibration_cell(arch: str, devices: int, out_dir: str,
+                         tiny: bool = False) -> dict:
+    """Close the predict→execute loop for one arch: profile the reduced
+    training step's ops + links, fit the device model, save the
+    :class:`~repro.profiling.CalibrationProfile` artifact next to the
+    dry-run results, re-annotate, re-partition, and score the Step-2
+    emulator's per-stage predictions against the segment runtime's
+    measured times (``PartitionPlan.accuracy_report``)."""
+    import repro
+    from repro.configs import reduced
+    from repro.models import init_params, loss_fn, smoke_batch
+    from repro.profiling import MeasureSpec, quick_spec
+
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, batch=2, seq=16 if tiny else 32)
+    traced = repro.trace(lambda p: loss_fn(cfg, p, batch)[0], params,
+                         record=True)
+    ppath = os.path.join(out_dir, f"{arch}__calibration.json")
+    spec = quick_spec(reps=2) if tiny else MeasureSpec()
+    profile = repro.calibrate(traced, spec=spec,
+                              max_signatures=40 if tiny else None,
+                              meta={"arch": arch, "source": "dryrun"},
+                              save=ppath)
+    traced.annotate(profile)
+    device_map = repro.fold_device_map(devices)
+    plan = repro.partition(traced, devices=devices,
+                           meta={"arch": arch, "source": "dryrun",
+                                 "calibration": ppath})
+    acc = plan.accuracy_report(params, device_map=device_map,
+                               reps=2 if tiny else 3)
+    return {"arch": arch, "ops": plan.n, "profile": ppath,
+            "signatures": len(profile.ops), "fitted": profile.fitted,
+            "stage_mape_pct": acc["stage_mape_pct"],
+            "device_mape_pct": acc["device_mape_pct"],
+            "measured_wall_s": acc["measured_wall_s"],
+            "predicted_makespan_s": acc["predicted_makespan_s"],
+            "summary": profile.summary()}
+
+
 def cell_name(arch, shape, mesh_kind, tag=""):
     t = f"__{tag}" if tag else ""
     return f"{arch}__{shape}__{mesh_kind}{t}"
@@ -314,7 +357,37 @@ def main():
                     help="also run the plan through both execution "
                          "engines and report interpreter-vs-compiled "
                          "speedup + measured-vs-predicted peak bytes")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="profile real op/link costs, fit the device "
+                         "model, save a CalibrationProfile per arch and "
+                         "report predicted-vs-measured stage MAPE")
+    ap.add_argument("--calibrate-tiny", action="store_true",
+                    help="cheap calibration settings (CI smoke)")
     args = ap.parse_args()
+
+    if args.calibrate:
+        os.makedirs(args.out, exist_ok=True)
+        archs = ASSIGNED_ARCHS if args.arch is None else [args.arch]
+        for a in archs:
+            t0 = time.perf_counter()
+            try:
+                res = run_calibration_cell(a, args.pardnn_devices,
+                                           args.out,
+                                           tiny=args.calibrate_tiny)
+                path = os.path.join(args.out, f"{a}__calibration_report"
+                                              f".json")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                mape = res["stage_mape_pct"]   # None: nothing scorable
+                print(f"[OK] {a}: {res['summary']}; stage MAPE "
+                      f"{'n/a' if mape is None else f'{mape:.1f}%'}, wall "
+                      f"{res['measured_wall_s'] * 1e3:.1f} ms vs "
+                      f"predicted {res['predicted_makespan_s'] * 1e3:.1f}"
+                      f" ms -> {res['profile']} "
+                      f"({time.perf_counter() - t0:.1f}s)", flush=True)
+            except Exception as e:
+                print(f"[FAIL] {a}: {type(e).__name__}: {e}", flush=True)
+        return
 
     if args.pardnn:
         os.makedirs(args.out, exist_ok=True)

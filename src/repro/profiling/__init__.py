@@ -1,0 +1,144 @@
+"""repro.profiling — measurement & calibration subsystem.
+
+Closes the predict→execute loop: the partitioner plans against a cost
+model, the runtime executes the plan; this package *measures* real ops,
+segments and links, fits the device model to the measurements, and
+re-annotates cost graphs — so plans are built on measured costs and
+plan predictions can be scored against reality
+(:meth:`repro.PartitionPlan.accuracy_report`).
+
+Layers (each usable standalone):
+
+* :mod:`.measure` — robust micro-timing (warmup, median-of-k, MAD
+  outlier rejection, bimodality-aware retries).
+* :mod:`.opbench` — op/segment/transfer profilers over real devices.
+* :mod:`.calibrate` — alpha–beta & roofline fits →
+  :class:`~repro.core.costmodel.CalibratedDeviceModel`.
+* :mod:`.artifact` — :class:`CalibrationProfile` save/load (JSON
+  header + npz samples, schema + device-fingerprint validation).
+
+The one-call driver is :func:`run_calibration` (exposed as
+``repro.calibrate``).
+"""
+from __future__ import annotations
+
+from .measure import (DEFAULT_SPEC, MeasureSpec, Measurement, measure_call,
+                      median_mad, quick_spec)
+from .opbench import (DEFAULT_TRANSFER_SIZES, OpSample, TransferSample,
+                      measure_dispatch_overhead, node_signature,
+                      graph_signatures, profile_ops, profile_segments,
+                      profile_transfers)
+from .calibrate import (fit_alpha_beta, fit_compute_params,
+                        fit_device_model, fit_params)
+from .artifact import (CALIB_SCHEMA_VERSION, CalibrationProfile,
+                       current_device_fingerprint)
+from ..core.errors import ProfileValidationError
+
+__all__ = [
+    "MeasureSpec", "Measurement", "measure_call", "median_mad",
+    "quick_spec", "DEFAULT_SPEC",
+    "OpSample", "TransferSample", "node_signature", "graph_signatures",
+    "profile_ops", "profile_segments", "profile_transfers",
+    "measure_dispatch_overhead", "DEFAULT_TRANSFER_SIZES",
+    "fit_alpha_beta", "fit_compute_params", "fit_device_model",
+    "fit_params",
+    "CalibrationProfile", "CALIB_SCHEMA_VERSION",
+    "current_device_fingerprint", "ProfileValidationError",
+    "run_calibration",
+]
+
+
+def run_calibration(traced, *example_args, spec=None, sizes=None,
+                    device=None, max_signatures=None, meta=None,
+                    save=None, **example_kwargs) -> CalibrationProfile:
+    """Profile a traced model's ops + the device links and fit the model.
+
+    Args:
+        traced: a :class:`repro.TracedModel` recorded with
+            ``record=True`` (the program is replayed op by op).
+        example_args/kwargs: concrete inputs; defaults to the example
+            the trace was taken with.
+        spec: :class:`MeasureSpec` timing knobs (default: robust).
+        sizes: transfer payload ladder (bytes); default
+            :data:`DEFAULT_TRANSFER_SIZES`.
+        device: jax device ops run on.
+        max_signatures: measurement budget for op signatures.
+        meta: free-form dict stored in the artifact header.
+        save: path — write the artifact before returning.
+
+    Returns the :class:`CalibrationProfile`; feed it back via
+    ``repro.trace(..., calibration=profile)``,
+    ``TracedModel.annotate(profile)``, or the ``REPRO_CALIBRATION``
+    environment variable.
+    """
+    import jax
+
+    if traced.program is None:
+        raise ValueError("run_calibration needs a trace recorded with "
+                         "record=True (the program is replayed)")
+    prog = traced.program
+    if not example_args and not example_kwargs:
+        example_args, example_kwargs = prog.in_tree_example
+    flat = jax.tree_util.tree_leaves((tuple(example_args),
+                                      dict(example_kwargs)))
+    spec = spec or DEFAULT_SPEC
+    ops = profile_ops(traced.graph, prog, *flat, device=device, spec=spec,
+                      max_signatures=max_signatures)
+    transfers = profile_transfers(sizes or DEFAULT_TRANSFER_SIZES,
+                                  spec=spec)
+    overhead = measure_dispatch_overhead(device, spec).seconds
+    base = traced.device_model
+    if base is None:
+        from ..core.costmodel import TPU_V5E
+        base = TPU_V5E
+    fingerprint = current_device_fingerprint()
+    # raw fits, None where nothing usable was measured — the artifact
+    # must never present the base model's guesses as calibrated values
+    fitted = fit_params(ops, transfers, base,
+                        dispatch_overhead_s=overhead)
+    profile = CalibrationProfile(
+        ops=ops, transfers=transfers, fitted=fitted,
+        base_model=base.to_dict(), device_fingerprint=fingerprint,
+        dispatch_overhead_s=overhead, meta=dict(meta or {}))
+    profile.fusion_factor = _fit_fusion_factor(traced, profile, flat,
+                                               device, spec)
+    if save:
+        profile.save(save)
+    return profile
+
+
+def _fit_fusion_factor(traced, profile, flat_args, device, spec) -> float:
+    """measured wall of one fully-fused compiled run / summed op costs.
+
+    The whole program is compiled as a single jitted segment on one
+    device (``CompiledRuntime`` with no assignment) — what XLA's fusion
+    actually achieves on this graph — and compared against the sum of
+    the dispatch-corrected per-op measurements (analytic roofline for
+    signatures outside the measurement budget). Independent of any
+    partition, so plan scoring against it is not circular.
+    """
+    import jax
+
+    from ..core.runtime import CompiledRuntime
+    from .measure import measure_call
+
+    model = profile.device_model()
+    corrected = profile.op_seconds_by_signature()
+    g = traced.graph
+    sigs = graph_signatures(g)
+    pred_sum = 0.0
+    for nid in traced.program.program:
+        t = corrected.get(sigs[nid])
+        if t is None:
+            t = model.compute_seconds(float(g.op_flops[nid]),
+                                      float(g.op_bytes[nid]))
+        pred_sum += t
+    if pred_sum <= 0:
+        return 1.0
+    if device is None:
+        device = jax.devices()[0]
+    rt = CompiledRuntime(traced.program, None, [device])
+    rt(*flat_args)                            # pays compilation
+    m = measure_call(lambda: rt(*flat_args), spec=spec,
+                     sync=jax.block_until_ready)
+    return float(min(max(m.seconds / pred_sum, 1e-3), 2.0))

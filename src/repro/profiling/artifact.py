@@ -1,0 +1,265 @@
+"""CalibrationProfile — the durable, shareable calibration artifact.
+
+Mirrors :class:`repro.api.PartitionPlan`'s persistence format: a JSON
+header (schema version, device fingerprint, fitted parameters, payload
+sha256, metadata) plus a sibling ``.npz`` holding every measured sample
+bit-for-bit. A profile loaded on a different machine than it was
+measured on is a silent-wrongness hazard — the header carries a
+*device fingerprint* (platform, device kind/count, jax version) that
+:meth:`CalibrationProfile.load` can enforce.
+
+Header schema (version 1)::
+
+    {
+      "format": "repro-calibration-profile",
+      "schema_version": 1,
+      "device_fingerprint": "cpu|TFRT_CPU|x1|jax=0.4.35",
+      "base_model": {.. DeviceModel params ..},
+      "fitted": {"flop_efficiency": .., "hbm_bw": ..,
+                 "link_bw": .., "link_latency": ..},
+      "num_op_signatures": N, "num_transfer_points": M,
+      "samples_file": "<stem>.npz", "samples_sha256": "...",
+      "meta": {...}
+    }
+
+The npz payload: per-signature arrays (``op_sig`` .. ``op_samples`` +
+``op_samples_indptr`` for the ragged raw samples) and the transfer
+ladder (``tr_bytes`` / ``tr_seconds`` / ``tr_dispersion`` /
+``tr_samples`` + indptr).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.costmodel import CalibratedDeviceModel, DeviceModel
+from ..core.errors import ProfileValidationError
+from .opbench import (CORRECTION_FLOOR_FRAC, OpSample, TransferSample,
+                      corrected_seconds)
+
+CALIB_FORMAT = "repro-calibration-profile"
+CALIB_SCHEMA_VERSION = 1
+KNOWN_CALIB_SCHEMA_VERSIONS = (1,)
+
+
+def current_device_fingerprint() -> str:
+    """Fingerprint of the measuring environment: platform, device kind,
+    device count, jax version — enough to refuse a profile measured on
+    different hardware."""
+    import jax
+    devs = jax.devices()
+    kind = devs[0].device_kind if devs else "none"
+    return (f"{jax.default_backend()}|{kind}|x{len(devs)}"
+            f"|jax={jax.__version__}")
+
+
+def _ragged(chunks: list[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    indptr = np.zeros(len(chunks) + 1, dtype=np.int64)
+    if chunks:
+        np.cumsum([c.size for c in chunks], out=indptr[1:])
+    flat = (np.concatenate(chunks) if chunks
+            else np.zeros(0)).astype(np.float64)
+    return flat, indptr
+
+
+def _unragged(flat: np.ndarray, indptr: np.ndarray) -> list[np.ndarray]:
+    return [flat[indptr[i]:indptr[i + 1]] for i in range(indptr.size - 1)]
+
+
+def _npz_path(path: str) -> str:
+    stem, ext = os.path.splitext(path)
+    return (stem if ext.lower() in (".json", ".profile") else path) + ".npz"
+
+
+@dataclass
+class CalibrationProfile:
+    """Measured op/transfer samples + the device-model fit over them."""
+    ops: list[OpSample]
+    transfers: list[TransferSample]
+    fitted: dict                      # flop_efficiency/hbm_bw/link_bw/latency
+    base_model: dict                  # DeviceModel params the fit overlays
+    device_fingerprint: str
+    # per-bind eager dispatch overhead (seconds) measured alongside the
+    # ops — compiled segments fuse it away, so consumers predicting
+    # compiled execution must subtract it (op_seconds_by_signature does)
+    dispatch_overhead_s: float = 0.0
+    # XLA fusion factor: measured wall seconds of one fully-fused
+    # compiled execution of the whole program divided by the sum of the
+    # (dispatch-corrected) per-op costs. Eager per-op timing cannot see
+    # fusion, so summed op costs overpredict compiled segments by this
+    # ratio; annotation rescales by it (measured independently of any
+    # particular partition, so scoring a plan against it is not
+    # circular). 1.0 when not measured.
+    fusion_factor: float = 1.0
+    meta: dict = field(default_factory=dict)
+    schema_version: int = CALIB_SCHEMA_VERSION
+
+    # -- views --------------------------------------------------------------
+    def op_seconds_by_signature(self, corrected: bool = True,
+                                floor_frac: float = CORRECTION_FLOOR_FRAC
+                                ) -> dict[str, float]:
+        """signature -> robust measured seconds (the annotation table).
+
+        With ``corrected=True`` (default) the measured dispatch
+        overhead is subtracted — the estimate of the op's cost *inside
+        a compiled segment* — floored at ``floor_frac`` of the raw
+        measurement so relative op ordering survives the correction
+        (the same ``corrected_seconds`` the fitting path uses).
+        """
+        oh = self.dispatch_overhead_s if corrected else 0.0
+        return {s.signature: corrected_seconds(s.seconds, oh, floor_frac)
+                for s in self.ops}
+
+    def device_model(self, base: DeviceModel | None = None
+                     ) -> CalibratedDeviceModel:
+        """The fitted model, overlaid on ``base`` (default: the base
+        model recorded in the profile)."""
+        if base is None:
+            base = DeviceModel(**self.base_model)
+        return CalibratedDeviceModel.from_base(
+            base, source=self.device_fingerprint, **self.fitted)
+
+    def summary(self) -> str:
+        f = self.fitted
+        parts = [f"{len(self.ops)} op signatures",
+                 f"{len(self.transfers)} transfer points"]
+        if f.get("flop_efficiency") is not None:
+            parts.append(f"eff={f['flop_efficiency']:.3g}")
+        if f.get("hbm_bw") is not None:
+            parts.append(f"hbm={f['hbm_bw'] / 1e9:.3g}GB/s")
+        if f.get("link_bw") is not None:
+            parts.append(f"link={f['link_bw'] / 1e9:.3g}GB/s"
+                         f"+{f.get('link_latency', 0) * 1e6:.1f}us")
+        return ("CalibrationProfile[" + self.device_fingerprint + "]: "
+                + ", ".join(parts))
+
+    # -- persistence --------------------------------------------------------
+    def _arrays(self) -> dict[str, np.ndarray]:
+        ops = self.ops
+        op_samples, op_indptr = _ragged([s.samples for s in ops])
+        tr_samples, tr_indptr = _ragged([t.samples for t in self.transfers])
+        return {
+            "op_sig": np.asarray([s.signature for s in ops]),
+            "op_name": np.asarray([s.name for s in ops]),
+            "op_flops": np.asarray([s.flops for s in ops], np.float64),
+            "op_bytes": np.asarray([s.bytes_touched for s in ops],
+                                   np.float64),
+            "op_out_bytes": np.asarray([s.out_bytes for s in ops],
+                                       np.float64),
+            "op_seconds": np.asarray([s.seconds for s in ops], np.float64),
+            "op_dispersion": np.asarray([s.dispersion for s in ops],
+                                        np.float64),
+            "op_count": np.asarray([s.count for s in ops], np.int64),
+            "op_samples": op_samples, "op_samples_indptr": op_indptr,
+            "tr_bytes": np.asarray([t.nbytes for t in self.transfers],
+                                   np.float64),
+            "tr_seconds": np.asarray([t.seconds for t in self.transfers],
+                                     np.float64),
+            "tr_dispersion": np.asarray(
+                [t.dispersion for t in self.transfers], np.float64),
+            "tr_samples": tr_samples, "tr_samples_indptr": tr_indptr,
+        }
+
+    def save(self, path: str) -> str:
+        """Write ``path`` (JSON header) + sibling ``.npz``; returns path."""
+        apath = _npz_path(path)
+        arrays = self._arrays()
+        with open(apath, "wb") as f:
+            np.savez(f, **arrays)
+        with open(apath, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        header = {
+            "format": CALIB_FORMAT,
+            "schema_version": self.schema_version,
+            "device_fingerprint": self.device_fingerprint,
+            "dispatch_overhead_s": float(self.dispatch_overhead_s),
+            "fusion_factor": float(self.fusion_factor),
+            "base_model": self.base_model,
+            "fitted": {k: (None if v is None else float(v))
+                       for k, v in self.fitted.items()},
+            "num_op_signatures": len(self.ops),
+            "num_transfer_points": len(self.transfers),
+            "samples_file": os.path.basename(apath),
+            "samples_sha256": digest,
+            "meta": self.meta,
+        }
+        with open(path, "w") as f:
+            json.dump(header, f, indent=1)
+        return path
+
+    @classmethod
+    def load(cls, path: str, *, expect_device: str | bool = False
+             ) -> "CalibrationProfile":
+        """Load and validate a profile artifact.
+
+        Raises :class:`ProfileValidationError` on a wrong format, an
+        unknown schema version, a corrupted samples payload, or — with
+        ``expect_device=True`` (check against this process's devices)
+        or an explicit fingerprint string — a device mismatch.
+        """
+        with open(path) as f:
+            header = json.load(f)
+        if header.get("format") != CALIB_FORMAT:
+            raise ProfileValidationError(
+                f"{path}: not a {CALIB_FORMAT} file "
+                f"(format={header.get('format')!r})")
+        ver = header.get("schema_version")
+        if ver not in KNOWN_CALIB_SCHEMA_VERSIONS:
+            raise ProfileValidationError(
+                f"{path}: unknown calibration schema version {ver!r}; "
+                f"this build supports "
+                f"{list(KNOWN_CALIB_SCHEMA_VERSIONS)} — re-run "
+                f"repro.calibrate or upgrade the library")
+        apath = os.path.join(os.path.dirname(os.path.abspath(path)),
+                             header["samples_file"])
+        with open(apath, "rb") as f:
+            raw = f.read()
+        digest = hashlib.sha256(raw).hexdigest()
+        if digest != header["samples_sha256"]:
+            raise ProfileValidationError(
+                f"{path}: samples payload corrupted "
+                f"(sha256 {digest[:12]}… != header "
+                f"{header['samples_sha256'][:12]}…)")
+        if expect_device:
+            want = (current_device_fingerprint()
+                    if expect_device is True else str(expect_device))
+            got = header.get("device_fingerprint")
+            if got != want:
+                raise ProfileValidationError(
+                    f"{path}: profile was measured on {got!r}, this "
+                    f"environment is {want!r} — measured costs do not "
+                    f"transfer across devices; re-run repro.calibrate "
+                    f"(or pass expect_device=False to override)")
+        import io
+        with np.load(io.BytesIO(raw)) as z:
+            op_chunks = _unragged(z["op_samples"], z["op_samples_indptr"])
+            ops = [OpSample(signature=str(z["op_sig"][i]),
+                            name=str(z["op_name"][i]),
+                            flops=float(z["op_flops"][i]),
+                            bytes_touched=float(z["op_bytes"][i]),
+                            out_bytes=float(z["op_out_bytes"][i]),
+                            seconds=float(z["op_seconds"][i]),
+                            dispersion=float(z["op_dispersion"][i]),
+                            count=int(z["op_count"][i]),
+                            samples=op_chunks[i])
+                   for i in range(z["op_sig"].shape[0])]
+            tr_chunks = _unragged(z["tr_samples"], z["tr_samples_indptr"])
+            transfers = [TransferSample(nbytes=float(z["tr_bytes"][i]),
+                                        seconds=float(z["tr_seconds"][i]),
+                                        dispersion=float(
+                                            z["tr_dispersion"][i]),
+                                        samples=tr_chunks[i])
+                         for i in range(z["tr_bytes"].shape[0])]
+        return cls(ops=ops, transfers=transfers,
+                   fitted=dict(header["fitted"]),
+                   base_model=dict(header["base_model"]),
+                   device_fingerprint=header["device_fingerprint"],
+                   dispatch_overhead_s=float(
+                       header.get("dispatch_overhead_s", 0.0)),
+                   fusion_factor=float(header.get("fusion_factor", 1.0)),
+                   meta=dict(header.get("meta") or {}),
+                   schema_version=int(ver))

@@ -1,0 +1,298 @@
+"""Per-op / per-segment / per-link profiler over real devices.
+
+The paper's ParDNN consumes graphs annotated from TensorFlow profiling
+runs; this module is that measurement side for our JAX stack. Three
+probes, all built on :mod:`repro.profiling.measure`:
+
+* :func:`profile_ops` replays a recorded :class:`TracedProgram` node by
+  node (the interpreter's semantics), groups nodes into *signatures* —
+  ``name | FLOPs | bytes touched | output bytes``, derived purely from
+  the cost graph so the same key is computable at annotation time — and
+  robustly times one representative ``prim.bind`` per signature,
+  recording wall seconds, dispersion, and the live-memory delta (output
+  bytes) of the op.
+* :func:`profile_transfers` times ``jax.device_put`` across a device
+  pair over a ladder of payload sizes — the samples the alpha–beta
+  transfer model is regressed from. On a single-device host it times
+  host→device commits instead (still a real copy).
+* :func:`profile_segments` runs a :class:`~repro.core.runtime.
+  CompiledRuntime` in its per-segment profiling mode and reduces the
+  per-call segment wall times to robust medians — the measured side of
+  :meth:`PartitionPlan.accuracy_report`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .measure import MeasureSpec, DEFAULT_SPEC, measure_call, median_mad
+
+#: Default payload ladder for transfer profiling (bytes of float32).
+DEFAULT_TRANSFER_SIZES = (1 << 10, 1 << 13, 1 << 16, 1 << 19,
+                          1 << 22, 1 << 24)
+
+#: Fraction of the raw measurement the dispatch-overhead correction may
+#: not go below — keeps relative op ordering when the overhead is
+#: comparable to the op cost itself.
+CORRECTION_FLOOR_FRAC = 0.1
+
+
+def corrected_seconds(seconds: float, overhead_s: float,
+                      floor_frac: float = CORRECTION_FLOOR_FRAC) -> float:
+    """Measured eager per-op seconds minus the per-bind dispatch
+    overhead, floored at ``floor_frac`` of the raw measurement — the
+    one correction shared by the fitting (`calibrate`) and annotation
+    (`CalibrationProfile.op_seconds_by_signature`) paths."""
+    return max(seconds - overhead_s, seconds * floor_frac)
+
+
+def node_signature(name: str, flops: float, bytes_touched: float,
+                   out_bytes: float) -> str:
+    """Grouping key for "same op, same shape class" — computable both
+    while replaying the program (profiling) and from the bare cost
+    graph (annotation), so measured times can be mapped back onto
+    graph nodes without keeping avals around. The tracer's
+    per-iteration ``scan_slice_<it>`` names are collapsed to one
+    signature — L identical slice ops must cost one measurement, not
+    L robust timing loops."""
+    if name.startswith("scan_slice_"):
+        name = "scan_slice"
+    return f"{name}|f={flops:.6g}|b={bytes_touched:.6g}|o={out_bytes:.6g}"
+
+
+def graph_signatures(g) -> list[str]:
+    """Per-node signatures of a traced cost graph (requires the tracer's
+    ``op_flops``/``op_bytes`` annotations)."""
+    if g.op_flops is None or g.op_bytes is None:
+        raise ValueError(
+            "cost graph carries no op_flops/op_bytes annotations — "
+            "re-trace with this build (repro.trace) to profile/annotate")
+    mem = np.asarray(g.mem, dtype=np.float64)
+    return [node_signature(g.names[i], float(g.op_flops[i]),
+                           float(g.op_bytes[i]), float(mem[i]))
+            for i in range(g.n)]
+
+
+@dataclass
+class OpSample:
+    """One measured op signature."""
+    signature: str
+    name: str
+    flops: float
+    bytes_touched: float
+    out_bytes: float            # live-memory delta of executing the op
+    seconds: float              # robust per-call estimate
+    dispersion: float
+    count: int = 1              # program nodes this signature covers
+    samples: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, dtype=np.float64))
+
+
+@dataclass
+class TransferSample:
+    nbytes: float
+    seconds: float
+    dispersion: float
+    samples: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, dtype=np.float64))
+
+
+def _nbytes(v) -> float:
+    nb = getattr(v, "nbytes", None)
+    if nb is not None:
+        return float(nb)
+    if isinstance(v, tuple):
+        return float(sum(_nbytes(x) for x in v))
+    return 0.0
+
+
+def profile_ops(graph, prog, *flat_args, device=None,
+                spec: MeasureSpec = DEFAULT_SPEC,
+                max_signatures: int | None = None) -> list[OpSample]:
+    """Replay ``prog`` op by op, timing one representative node per
+    signature.
+
+    Args:
+        graph: the traced :class:`CostGraph` (node ids match ``prog``;
+            provides names/flops/bytes for the signatures).
+        prog: recorded :class:`TracedProgram`.
+        flat_args: flattened input leaves, in ``prog.input_nodes`` order
+            (e.g. ``jax.tree_util.tree_leaves(example)``).
+        device: jax device everything runs on (default: first device).
+        spec: robust-timing knobs.
+        max_signatures: measurement budget — signatures beyond it (in
+            descending node-count · FLOPs order of first encounter) are
+            replayed but not timed.
+
+    Returns one :class:`OpSample` per *measured* signature, ``count``
+    set to the number of program nodes the signature covers.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if device is None:
+        device = jax.devices()[0]
+    if len(flat_args) != len(prog.input_nodes):
+        raise ValueError(f"expected {len(prog.input_nodes)} input leaves, "
+                         f"got {len(flat_args)}")
+    sigs = graph_signatures(graph)
+
+    vals: dict[int, object] = {}
+    for nid, cval in prog.const_nodes:
+        vals[nid] = jax.device_put(cval, device)
+    for nid, a in zip(prog.input_nodes, flat_args):
+        vals[nid] = jax.device_put(a, device)
+
+    # budget: count signature populations first so the cap keeps the
+    # *hottest* signatures, not the first-encountered ones
+    pop: dict[str, int] = {}
+    for nid in prog.program:
+        pop[sigs[nid]] = pop.get(sigs[nid], 0) + 1
+    allowed: set[str] | None = None
+    if max_signatures is not None and len(pop) > max_signatures:
+        flop_of = {s: 0.0 for s in pop}
+        for nid in prog.program:
+            flop_of[sigs[nid]] = float(graph.op_flops[nid])
+        ranked = sorted(pop, key=lambda s: (pop[s] * (1.0 + flop_of[s])),
+                        reverse=True)
+        allowed = set(ranked[:max_signatures])
+
+    # liveness-driven freeing: replaying the whole program with every
+    # intermediate alive is the all-live interpreter profile the
+    # segment runtime exists to avoid — drop a producer's value once
+    # its last consumer has run (graph outputs stay)
+    consumers, output_nodes = prog.liveness()
+    remaining = {p: len(cs) for p, cs in consumers.items()}
+
+    samples: dict[str, OpSample] = {}
+    for nid in sorted(prog.program):
+        prim, params, inputs = prog.program[nid]
+        invals = []
+        for inp in inputs:
+            if inp[0] == "lit":
+                invals.append(inp[1])
+            else:
+                _, src, idx = inp
+                v = vals[src]
+                invals.append(v[idx] if isinstance(v, tuple) else v)
+
+        def run():
+            if prim == "__scan_slice__":
+                return invals[0][params["index"]]
+            if prim == "__scan_stack__":
+                return jnp.stack(invals)
+            out = prim.bind(*invals, **params)
+            return tuple(out) if prim.multiple_results else out
+
+        sig = sigs[nid]
+        rec = samples.get(sig)
+        if rec is not None:
+            rec.count += 1
+            vals[nid] = run()
+        elif allowed is not None and sig not in allowed:
+            vals[nid] = run()
+        else:
+            m = measure_call(run, spec=spec, sync=jax.block_until_ready)
+            vals[nid] = m.result
+            samples[sig] = OpSample(
+                signature=sig, name=graph.names[nid],
+                flops=float(graph.op_flops[nid]),
+                bytes_touched=float(graph.op_bytes[nid]),
+                out_bytes=_nbytes(m.result),
+                seconds=m.seconds, dispersion=m.dispersion,
+                samples=np.asarray(m.samples, dtype=np.float64))
+        for src in {inp[1] for inp in inputs if inp[0] != "lit"}:
+            remaining[src] -= 1
+            if remaining[src] == 0 and src not in output_nodes:
+                vals.pop(src, None)
+    return list(samples.values())
+
+
+def measure_dispatch_overhead(device=None,
+                              spec: MeasureSpec = DEFAULT_SPEC):
+    """Per-bind eager dispatch overhead: the wall seconds of the
+    cheapest possible op (scalar add of committed values).
+
+    Op-by-op replay pays this on *every* bind, but the compiled segment
+    runtime fuses it away — measured op costs must be corrected by it
+    before they can predict compiled-segment times (the annotation path
+    does; see ``TracedModel.annotate``)."""
+    import jax
+
+    if device is None:
+        device = jax.devices()[0]
+    x = jax.device_put(np.float32(1.0), device)
+    y = jax.device_put(np.float32(2.0), device)
+    jax.block_until_ready((x, y))
+    return measure_call(lambda: jax.lax.add(x, y), spec=spec,
+                        sync=jax.block_until_ready)
+
+
+def profile_transfers(sizes=DEFAULT_TRANSFER_SIZES, *, src=None, dst=None,
+                      spec: MeasureSpec = DEFAULT_SPEC
+                      ) -> list[TransferSample]:
+    """Time ``jax.device_put`` over a ladder of payload sizes.
+
+    With two distinct devices the probe measures a committed
+    device-to-device copy; on a single-device host it measures
+    host(numpy)→device commits — still a genuine copy, which is what
+    the alpha–beta model needs."""
+    import jax
+    import jax.numpy as jnp
+
+    devs = jax.devices()
+    if src is None:
+        src = devs[0]
+    if dst is None:
+        dst = devs[1] if len(devs) > 1 else devs[0]
+    out = []
+    for nbytes in sizes:
+        n = max(int(nbytes) // 4, 1)
+        if src is dst:
+            payload = np.zeros(n, dtype=np.float32)   # host -> device
+        else:
+            payload = jax.device_put(jnp.zeros(n, jnp.float32), src)
+            jax.block_until_ready(payload)
+        m = measure_call(lambda: jax.device_put(payload, dst), spec=spec,
+                         sync=jax.block_until_ready)
+        out.append(TransferSample(
+            nbytes=float(n * 4), seconds=m.seconds,
+            dispersion=m.dispersion,
+            samples=np.asarray(m.samples, dtype=np.float64)))
+    return out
+
+
+def profile_segments(runtime, *args, reps: int = 3, warmup: bool = True,
+                     **kwargs) -> dict:
+    """Measured per-segment wall seconds of a compiled runtime.
+
+    Enables the runtime's per-segment profiling mode (a
+    ``block_until_ready`` after every segment — trading pipelining for
+    attributable timings), runs ``reps`` full calls, and reduces each
+    segment's samples to a median + MAD. Pass ``warmup=False`` when the
+    runtime has already executed (compilation paid) to skip the
+    unrecorded warmup pass.
+
+    Returns ``{"seconds": np.ndarray[num_segments],
+    "dispersion": np.ndarray, "samples": np.ndarray[reps, S],
+    "wall_seconds": np.ndarray[reps]}``.
+    """
+    if warmup:
+        runtime(*args, **kwargs)      # pays compilation
+    rows, walls = [], []
+    prev = runtime.profile_segments
+    runtime.profile_segments = True
+    try:
+        for _ in range(max(int(reps), 1)):
+            runtime(*args, **kwargs)
+            rows.append(list(runtime.stats.segment_seconds))
+            walls.append(runtime.stats.execute_seconds)
+    finally:
+        runtime.profile_segments = prev
+    mat = np.asarray(rows, dtype=np.float64)
+    med = np.median(mat, axis=0)
+    mad = np.median(np.abs(mat - med[None, :]), axis=0)
+    disp = np.divide(mad, med, out=np.zeros_like(med), where=med > 0)
+    return {"seconds": med, "dispersion": disp, "samples": mat,
+            "wall_seconds": np.asarray(walls, dtype=np.float64)}
