@@ -1,0 +1,163 @@
+"""Scenario-matrix benchmark: every registered architecture through the
+full trace → partition → compile → train-step loop on a forced
+multi-host-device mesh, one subprocess per arch (the mesh size must be
+fixed before jax initializes; see ``repro.conformance.subproc``).
+
+Emits ``BENCH_scenario_matrix.json``: per-arch partition time, segment
+count, cut-edge traffic, compiled step time, and predicted-vs-measured
+peak memory — plus the conformance verdict (violations list) from
+``repro.conformance.run_conformance``.
+
+Regression gate (``--check BASELINE``), per arch, policy documented in
+docs/ARCHITECTURE.md:
+
+  * **hard** — arch present, zero conformance violations, plan feasible;
+  * **structural, exact** — traced node count equals the baseline (the
+    trace of a fixed fn/shape is deterministic; a drift means the tracer
+    changed, which demands an intentional baseline update);
+  * **structural, banded** — segment count within ``1.5x + 2`` and
+    cut-edge bytes within ``1.5x + 1 MiB`` of baseline (placement may
+    move under cost-model tuning; wholesale fragmentation may not);
+  * **not gated** — wall-clock times (this container's clock is bimodal
+    under load; times are recorded for humans, not asserted).
+
+Refresh the committed baseline after an intentional change::
+
+    python benchmarks/bench_scenario_matrix.py \
+        --out benchmarks/BASELINE_scenario_matrix.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+SEG_FACTOR = 1.5
+SEG_SLACK = 2
+BYTES_FACTOR = 1.5
+BYTES_SLACK = 1 << 20
+
+
+def run_matrix(archs=None, devices: int = 4) -> dict:
+    from repro.conformance import (SubprocessError, build_matrix,
+                                   run_arch_subprocess)
+    matrix = build_matrix()
+    archs = list(archs) if archs else sorted(matrix)
+    records = {}
+    for arch in archs:
+        spec = matrix[arch]
+        t0 = time.perf_counter()
+        if spec.skip_reason:
+            records[arch] = {"arch": arch, "ok": False, "skipped": True,
+                             "skip_reason": spec.skip_reason,
+                             "violations": []}
+            print(f"  {arch:24s} SKIP ({spec.skip_reason})")
+            continue
+        try:
+            rec = run_arch_subprocess(arch, devices=devices,
+                                      timeout=spec.timeout)
+        except SubprocessError as e:
+            rec = {"arch": arch, "ok": False, "skipped": False,
+                   "violations": [f"subprocess failure: {e}"]}
+        rec["wall_s"] = time.perf_counter() - t0
+        records[arch] = rec
+        status = "ok" if rec.get("ok") else "FAIL"
+        print(f"  {arch:24s} {status:4s} n={rec.get('num_nodes', '?'):>6} "
+              f"segs={rec.get('num_segments', '?'):>4} "
+              f"cut={rec.get('cut_edge_bytes', 0) / 2**20:7.2f}MiB "
+              f"step={rec.get('step_s', 0) * 1e3:8.2f}ms "
+              f"wall={rec['wall_s']:6.1f}s")
+        for v in rec.get("violations", []):
+            print(f"    violation: {v}")
+    return {"devices": devices, "records": records}
+
+
+def check_against(result: dict, baseline: dict) -> list[str]:
+    """Gate ``result`` against a committed baseline; returns failures."""
+    fails: list[str] = []
+    recs = result["records"]
+    for arch, base in sorted(baseline["records"].items()):
+        rec = recs.get(arch)
+        if rec is None:
+            fails.append(f"{arch}: present in baseline but not run")
+            continue
+        if base.get("skipped"):
+            continue
+        if rec.get("skipped"):
+            fails.append(f"{arch}: skipped now ({rec.get('skip_reason')}) "
+                         f"but ran in baseline")
+            continue
+        for v in rec.get("violations", []):
+            fails.append(f"{arch}: conformance violation: {v}")
+        if not rec.get("feasible", False):
+            fails.append(f"{arch}: plan infeasible")
+        if rec.get("num_nodes") != base.get("num_nodes"):
+            fails.append(
+                f"{arch}: traced node count {rec.get('num_nodes')} != "
+                f"baseline {base.get('num_nodes')} — tracer output changed; "
+                f"update the baseline if intentional")
+        seg, bseg = rec.get("num_segments", 0), base.get("num_segments", 0)
+        if seg > bseg * SEG_FACTOR + SEG_SLACK:
+            fails.append(f"{arch}: {seg} segments vs baseline {bseg} "
+                         f"(limit {SEG_FACTOR}x + {SEG_SLACK})")
+        cb = rec.get("cut_edge_bytes", 0.0)
+        bcb = base.get("cut_edge_bytes", 0.0)
+        if cb > bcb * BYTES_FACTOR + BYTES_SLACK:
+            fails.append(f"{arch}: cut-edge bytes {cb:.0f} vs baseline "
+                         f"{bcb:.0f} (limit {BYTES_FACTOR}x + 1 MiB)")
+    return fails
+
+
+def run(full: bool = False) -> dict:
+    """`benchmarks.run` hook: a one-arch smoke row (the full matrix is
+    its own CI job; see ``--help`` for the standalone CLI)."""
+    from .common import emit
+    result = run_matrix(archs=None if full else ["repro-lm-100m"])
+    for arch, rec in sorted(result["records"].items()):
+        emit(f"scenario_matrix/{arch}",
+             rec.get("step_s", 0.0) * 1e6,
+             "ok" if rec.get("ok") else "FAILED")
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="full-loop scenario matrix over all registered archs")
+    ap.add_argument("--out", default="BENCH_scenario_matrix.json")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated subset (default: all registered)")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
+                    help="gate against a committed baseline; exit 1 on "
+                         "regression")
+    args = ap.parse_args(argv)
+
+    archs = args.archs.split(",") if args.archs else None
+    print(f"scenario matrix on a forced {args.devices}-device host mesh")
+    result = run_matrix(archs=archs, devices=args.devices)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}")
+
+    bad = [a for a, r in result["records"].items()
+           if not r.get("ok") and not r.get("skipped")]
+    if bad:
+        print(f"FAILED archs: {', '.join(sorted(bad))}")
+        return 1
+    if args.check:
+        with open(args.check) as f:
+            baseline = json.load(f)
+        fails = check_against(result, baseline)
+        if fails:
+            print("regression gate FAILED:")
+            for msg in fails:
+                print(f"  {msg}")
+            return 1
+        print(f"regression gate ok vs {args.check} "
+              f"({len(baseline['records'])} archs)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

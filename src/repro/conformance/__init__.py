@@ -1,0 +1,26 @@
+"""Conformance & scenario matrix — every architecture through the full
+trace → partition → compiled-execute → train-step loop.
+
+ParDNN's claim is generality: the partitioner never looks at "deep
+learning aspects", only at an annotated DAG. This package is the
+enforcement of that claim for this repo: a matrix harness that drives
+**every** registered model config (reduced variants) through the
+complete loop on a real multi-host-device mesh and asserts per-arch
+invariants (engine equality, memory-limit respect, predicted-vs-measured
+peak, plan round-trip). ``tests/test_scenario_matrix.py`` runs the
+matrix per arch; ``benchmarks/bench_scenario_matrix.py`` records the
+per-arch numbers into ``BENCH_scenario_matrix.json`` with a CI
+regression gate against a committed baseline.
+"""
+from .matrix import (ArchSpec, MATRIX_OVERRIDES, build_matrix, matrix_archs,
+                     spec_for, make_train_step, example_batch,
+                     run_conformance)
+from .subproc import (SubprocessError, forced_mesh_env, run_py, run_json,
+                      run_arch_subprocess)
+
+__all__ = [
+    "ArchSpec", "MATRIX_OVERRIDES", "build_matrix", "matrix_archs",
+    "spec_for", "make_train_step", "example_batch", "run_conformance",
+    "SubprocessError", "forced_mesh_env", "run_py", "run_json",
+    "run_arch_subprocess",
+]

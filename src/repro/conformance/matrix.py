@@ -1,0 +1,373 @@
+"""The scenario matrix: per-arch specs, the full-loop runner, and the
+invariants it asserts.
+
+One :func:`run_conformance` call drives a single (reduced) architecture
+through the complete ParDNN loop on the current process's devices:
+
+    cfg → init_params → random batch → train_step (value_and_grad + SGD)
+      → repro.trace(record=True) → repro.partition(K, memory)
+      → plan.execute(runtime="compiled") on K real devices
+      → plan.execute(runtime="interpret")
+      → jit reference (the un-partitioned truth)
+      → plan.save / PartitionPlan.load / bind (round-trip)
+
+and checks, per arch:
+
+  * **engine equality** — compiled output within a few float ulp of the
+    op-by-op interpreter, and both within tolerance of the un-partitioned
+    ``jax.jit`` reference (XLA fuses across the whole step there, so the
+    reference tolerance is looser than the compiled-vs-interpreter one);
+  * **placement sanity** — every node placed exactly once on a device in
+    ``[0, K)``, the plan feasible, and the Step-2 predicted peaks within
+    the memory limit the partitioner was given;
+  * **memory fidelity** — measured per-device peak live bytes within
+    ``peak_factor × predicted + peak_slack`` (transfer copies and
+    committed residents make measured exceed the node-level prediction
+    on tiny graphs; the factor is the documented tolerance policy);
+  * **artifact round-trip** — save/load/bind survives with an identical
+    assignment and fingerprint.
+
+Checks never raise: every failure becomes an entry of the record's
+``violations`` list, so one broken arch reports all of its breakage at
+once and the matrix test shows the full picture.
+
+Batches are random, not zeros: an all-zeros batch drives layernorm
+variance to exactly 0, where gradients are ~1/eps and the step is so
+ill-conditioned that *no* two evaluation orders agree (measured: 1e10
+gradient magnitudes on hubert-xlarge). Conformance needs a
+well-conditioned point.
+
+Run one arch on a forced mesh from anywhere via
+``repro.conformance.run_arch_subprocess`` (subprocess; see
+``subproc.py``), or directly::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      python -m repro.conformance.matrix --arch rwkv6-7b --devices 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+#: per-arch overrides of the defaults in :class:`ArchSpec`. Scan-heavy
+#: archs with long block patterns (jamba: 8-layer period, gemma3:
+#: 6-layer period) stay at one period — their scan/segment stress comes
+#: from intra-layer recurrences (mamba chunk scans, sliding windows),
+#: and two periods of jamba alone cost more compile time than the rest
+#: of the matrix combined (measured: 825 segments vs 348).
+MATRIX_OVERRIDES: dict[str, dict] = {
+    "jamba-v0.1-52b": {"periods": 1},
+    "gemma3-1b": {"periods": 1},
+}
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    """How one architecture runs through the matrix, and its tolerances."""
+    arch: str
+    periods: int = 2           # scanned periods (≥2 exercises reverse scan)
+    batch: int = 2
+    seq: int = 16
+    devices: int = 4
+    mem_cap: float = 2e9       # per-device Step-2 limit (generous: feasible)
+    seed: int = 0
+    lr: float = 1e-3
+    # compiled vs interpreter: same primitives, same order, only segment
+    # fusion differs — a few float32 ulp on ~unit-scale values
+    ci_rtol: float = 2e-5
+    ci_atol: float = 2e-5
+    # compiled vs un-partitioned jit reference: whole-step fusion
+    ref_rtol: float = 2e-4
+    ref_atol: float = 2e-4
+    # measured peak live bytes vs Step-2 prediction (tolerance policy:
+    # docs/ARCHITECTURE.md "Conformance & scenario matrix")
+    peak_factor: float = 4.0
+    peak_slack: float = 8 * 2 ** 20
+    timeout: int = 900
+    # a non-None reason excludes the arch from the full loop; the matrix
+    # test asserts the reason explicitly instead of silently passing
+    skip_reason: str | None = None
+
+
+def build_matrix() -> dict[str, ArchSpec]:
+    """One :class:`ArchSpec` per *registered* config (not just
+    ``ASSIGNED_ARCHS``) — a 14th config added to ``repro.configs``
+    joins the matrix automatically."""
+    import repro.configs
+    from repro.configs import REGISTRY
+    return {name: ArchSpec(arch=name, **MATRIX_OVERRIDES.get(name, {}))
+            for name in sorted(REGISTRY)}
+
+
+def matrix_archs() -> list[str]:
+    return sorted(build_matrix())
+
+
+def spec_for(arch: str, **overrides) -> ArchSpec:
+    spec = build_matrix()[arch]
+    return dataclasses.replace(spec, **overrides) if overrides else spec
+
+
+# ---------------------------------------------------------------------------
+# model-side builders
+# ---------------------------------------------------------------------------
+def reduced_config(spec: ArchSpec):
+    from repro.configs import get_config, reduced
+    cfg0 = get_config(spec.arch)
+    return reduced(cfg0, layers=len(cfg0.prelude)
+                   + spec.periods * cfg0.period)
+
+
+def example_batch(cfg, spec: ArchSpec) -> dict:
+    """Deterministic, well-conditioned random batch (see module doc)."""
+    import jax
+    key = jax.random.PRNGKey(spec.seed)
+    kx, kt = jax.random.split(key)
+    B, S = spec.batch, spec.seq
+    targets = jax.random.randint(kt, (B, S), 0, cfg.vocab_size)
+    if cfg.frontend is not None:
+        import jax.numpy as jnp
+        x = (jax.random.normal(kx, (B, S, cfg.d_model)) * 0.1
+             ).astype(jnp.float32)
+        return {"embeds": x, "targets": targets}
+    return {"tokens": jax.random.randint(kx, (B, S), 0, cfg.vocab_size),
+            "targets": targets}
+
+
+def make_train_step(cfg, lr: float = 1e-3):
+    """One real SGD training step: loss, gradients, updated params."""
+    import jax
+    from repro.models import loss_fn
+
+    def train_step(params, batch):
+        (loss, _parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: p - lr * g, params, grads)
+        return loss, new_params
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# the full loop
+# ---------------------------------------------------------------------------
+def _tree_max_diff(a, b) -> float:
+    import jax
+    worst = 0.0
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        if x.size:
+            worst = max(worst, float(np.max(np.abs(x - y))))
+    return worst
+
+
+def _tree_close(a, b, rtol: float, atol: float) -> str | None:
+    """None when every leaf matches dtype/shape and values within
+    tolerance; else a description of the first mismatch."""
+    import jax
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return f"leaf count {len(la)} != {len(lb)}"
+    for i, (x, y) in enumerate(zip(la, lb)):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.shape != y.shape or x.dtype != y.dtype:
+            return (f"leaf {i}: shape/dtype {x.shape}/{x.dtype} != "
+                    f"{y.shape}/{y.dtype}")
+        try:
+            np.testing.assert_allclose(
+                x.astype(np.float64) if x.dtype.kind == "f" else x,
+                y.astype(np.float64) if y.dtype.kind == "f" else y,
+                rtol=rtol, atol=atol)
+        except AssertionError:
+            d = float(np.max(np.abs(x.astype(np.float64)
+                                    - y.astype(np.float64))))
+            return f"leaf {i}: max abs diff {d:.3e} > rtol={rtol}/atol={atol}"
+    return None
+
+
+def run_conformance(spec: ArchSpec, save_dir: str | None = None) -> dict:
+    """Drive ``spec.arch`` through the full loop on this process's
+    devices; returns the conformance record (plain JSON types).
+
+    Requires ``len(jax.devices()) >= spec.devices`` — run under a forced
+    mesh (:func:`repro.conformance.run_arch_subprocess`) from test or
+    benchmark processes whose device count is already locked at 1.
+    """
+    import tempfile
+
+    import jax
+
+    import repro
+    from repro.models import init_params
+
+    violations: list[str] = []
+    rec: dict = {"arch": spec.arch, "spec": {
+        "periods": spec.periods, "batch": spec.batch, "seq": spec.seq,
+        "devices": spec.devices, "mem_cap": spec.mem_cap,
+        "peak_factor": spec.peak_factor, "peak_slack": spec.peak_slack}}
+
+    if spec.skip_reason:
+        rec.update(ok=False, skipped=True, skip_reason=spec.skip_reason,
+                   violations=[])
+        return rec
+
+    devs = jax.devices()
+    if len(devs) < spec.devices:
+        raise RuntimeError(
+            f"conformance for {spec.arch} needs {spec.devices} devices, "
+            f"process has {len(devs)} — run via run_arch_subprocess or "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{spec.devices} before jax initializes")
+
+    cfg = reduced_config(spec)
+    params = init_params(cfg, jax.random.PRNGKey(spec.seed))
+    batch = example_batch(cfg, spec)
+    train_step = make_train_step(cfg, lr=spec.lr)
+    rec["num_layers"] = cfg.num_layers
+
+    # --- un-partitioned reference (one jit of the whole step) --------------
+    ref = jax.jit(train_step)(params, batch)
+    jax.block_until_ready(ref)
+
+    # --- trace -------------------------------------------------------------
+    t0 = time.perf_counter()
+    traced = repro.trace(train_step, params, batch, record=True)
+    rec["trace_s"] = time.perf_counter() - t0
+    rec["num_nodes"] = traced.n
+
+    # --- partition ---------------------------------------------------------
+    t0 = time.perf_counter()
+    plan = repro.partition(traced, devices=spec.devices,
+                           memory=spec.mem_cap,
+                           meta={"arch": spec.arch, "conformance": True})
+    rec["partition_s"] = time.perf_counter() - t0
+    rec["makespan_s"] = plan.makespan
+    rec["feasible"] = bool(plan.feasible)
+    rec["predicted_peak_bytes"] = [float(x) for x in plan.peak_mem]
+
+    # placement sanity: every node exactly one device in [0, K)
+    a = plan.assignment
+    if a.shape[0] != traced.n:
+        violations.append(
+            f"assignment covers {a.shape[0]} nodes, graph has {traced.n}")
+    if a.size and (int(a.min()) < 0 or int(a.max()) >= spec.devices):
+        violations.append(
+            f"assignment uses PEs [{int(a.min())}, {int(a.max())}] outside "
+            f"[0, {spec.devices})")
+    if not plan.feasible:
+        violations.append("partition reported infeasible under "
+                          f"mem_cap={spec.mem_cap:.3g}")
+    for pe, peak in enumerate(plan.peak_mem):
+        if plan.feasible and peak > spec.mem_cap:
+            violations.append(
+                f"device {pe}: predicted peak {peak:.3g} B exceeds the "
+                f"limit {spec.mem_cap:.3g} B the partitioner was given")
+
+    # --- compiled execution on the real mesh -------------------------------
+    t0 = time.perf_counter()
+    out_c = plan.execute(params, batch, runtime="compiled")
+    jax.block_until_ready(out_c)
+    rec["first_step_s"] = time.perf_counter() - t0
+    rt = dict(plan.report.runtime)
+    rec["compile_s"] = rt.get("compile_seconds", 0.0)
+    rec["num_segments"] = rt.get("num_segments", 0)
+    rec["segments_per_device"] = rt.get("segments_per_device", [])
+    rec["cut_edges"] = rt.get("num_transfer_edges", 0)
+    rec["transfers"] = rt.get("transfers", 0)
+    rec["cut_edge_bytes"] = rt.get("transfer_bytes", 0.0)
+    rec["measured_peak_bytes"] = rt.get("peak_live_bytes", [])
+
+    # steady state: compiled segments are cached on the plan
+    t0 = time.perf_counter()
+    out_c2 = plan.execute(params, batch, runtime="compiled")
+    jax.block_until_ready(out_c2)
+    rec["step_s"] = time.perf_counter() - t0
+
+    # repeated compiled calls are exactly deterministic
+    det = _tree_max_diff(out_c, out_c2)
+    if det != 0.0:
+        violations.append(
+            f"compiled runtime not deterministic across calls "
+            f"(max abs diff {det:.3e})")
+
+    # --- interpreter equality ----------------------------------------------
+    out_i = plan.execute(params, batch, runtime="interpret")
+    rec["compiled_vs_interpreter_max_diff"] = _tree_max_diff(out_c, out_i)
+    msg = _tree_close(out_c, out_i, spec.ci_rtol, spec.ci_atol)
+    if msg:
+        violations.append(f"compiled != interpreter: {msg}")
+
+    # --- reference equality ------------------------------------------------
+    rec["compiled_vs_reference_max_diff"] = _tree_max_diff(out_c, ref)
+    msg = _tree_close(out_c, ref, spec.ref_rtol, spec.ref_atol)
+    if msg:
+        violations.append(f"compiled != un-partitioned reference: {msg}")
+    loss = float(np.asarray(jax.tree_util.tree_leaves(out_c)[0]))
+    rec["loss"] = loss
+    if not np.isfinite(loss):
+        violations.append(f"non-finite loss {loss}")
+
+    # --- measured peak vs Step-2 prediction --------------------------------
+    pred = rec["predicted_peak_bytes"]
+    meas = rec["measured_peak_bytes"]
+    rec["peak_ratio"] = [
+        (m / p if p else None) for m, p in zip(meas, pred)]
+    for pe, (m, p) in enumerate(zip(meas, pred)):
+        if m > p * spec.peak_factor + spec.peak_slack:
+            violations.append(
+                f"device {pe}: measured peak {m:.3g} B exceeds "
+                f"{spec.peak_factor}x predicted ({p:.3g} B) + "
+                f"{spec.peak_slack:.3g} B slack")
+
+    # --- plan artifact round-trip ------------------------------------------
+    with tempfile.TemporaryDirectory() as td:
+        path = plan.save((save_dir or td) + f"/{spec.arch}.plan.json")
+        plan2 = repro.PartitionPlan.load(path, traced=traced)
+        if not np.array_equal(plan2.assignment, plan.assignment):
+            violations.append("plan round-trip changed the assignment")
+        if plan2.fingerprint != plan.fingerprint:
+            violations.append("plan round-trip changed the fingerprint")
+        if plan2.k != plan.k:
+            violations.append("plan round-trip changed K")
+
+    rec["violations"] = violations
+    rec["ok"] = not violations
+    rec["skipped"] = False
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# CLI (the subprocess entry point)
+# ---------------------------------------------------------------------------
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--periods", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    overrides = {"devices": args.devices}
+    for k in ("periods", "batch", "seq"):
+        v = getattr(args, k)
+        if v is not None:
+            overrides[k] = v
+    spec = spec_for(args.arch, **overrides)
+    rec = run_conformance(spec)
+    from .subproc import JSON_MARK
+    print(JSON_MARK + json.dumps(rec))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,89 @@
+"""Forced-mesh subprocess helpers.
+
+A JAX process locks its device count at first init, so "run this on a
+4-host-device mesh" from inside an already-initialized test/benchmark
+process requires a subprocess with ``XLA_FLAGS=--xla_force_host_
+platform_device_count=N`` set *before* jax imports. ``tests/
+test_runtime.py`` and ``tests/test_multidevice.py`` each grew their own
+copy of that trick; this module is the one shared implementation, plus a
+JSON-payload convention so structured results (the conformance records)
+cross the process boundary instead of grepping stdout.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+#: last-line marker a payload-emitting CLI prints before its JSON body
+JSON_MARK = "CONFORMANCE_JSON:"
+
+
+class SubprocessError(RuntimeError):
+    """A forced-mesh subprocess failed; message carries stderr/stdout."""
+
+
+def repo_src_path() -> str:
+    """Directory containing the ``repro`` package (for PYTHONPATH)."""
+    import repro
+    return os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+
+
+def forced_mesh_env(devices: int, base: dict | None = None) -> dict:
+    """Environment for a subprocess that must see ``devices`` host
+    devices: XLA_FLAGS forced *before* jax init, CPU platform, and the
+    running repro checkout on PYTHONPATH."""
+    env = dict(os.environ if base is None else base)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{int(devices)}")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src = repo_src_path()
+    pp = env.get("PYTHONPATH", "")
+    if src not in pp.split(os.pathsep):
+        env["PYTHONPATH"] = src + (os.pathsep + pp if pp else "")
+    return env
+
+
+def run_py(code: str, devices: int = 4, timeout: int = 600) -> str:
+    """Run a python snippet under a forced ``devices``-device mesh;
+    returns stdout, raises :class:`SubprocessError` on nonzero exit."""
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=forced_mesh_env(devices))
+    if r.returncode != 0:
+        raise SubprocessError(
+            f"subprocess exited {r.returncode}:\n{r.stderr[-4000:]}")
+    return r.stdout
+
+
+def run_json(argv: list[str], devices: int = 4, timeout: int = 900) -> dict:
+    """Run ``python <argv...>`` under a forced mesh and parse the last
+    ``CONFORMANCE_JSON:`` line of stdout as the structured result."""
+    r = subprocess.run([sys.executable] + list(argv), capture_output=True,
+                       text=True, timeout=timeout,
+                       env=forced_mesh_env(devices))
+    if r.returncode != 0:
+        raise SubprocessError(
+            f"{' '.join(argv)} exited {r.returncode}:\n"
+            f"stderr: {r.stderr[-4000:]}\nstdout: {r.stdout[-1000:]}")
+    for line in reversed(r.stdout.splitlines()):
+        if line.startswith(JSON_MARK):
+            return json.loads(line[len(JSON_MARK):])
+    raise SubprocessError(
+        f"{' '.join(argv)}: no {JSON_MARK} payload in stdout:\n"
+        f"{r.stdout[-2000:]}")
+
+
+def run_arch_subprocess(arch: str, devices: int = 4, timeout: int = 900,
+                        extra_args: tuple = ()) -> dict:
+    """Run one architecture's full conformance loop on a forced mesh.
+
+    Spawns ``python -m repro.conformance.matrix --arch <arch>`` with the
+    device count forced in the child's environment and returns the
+    conformance record (see :func:`repro.conformance.run_conformance`).
+    """
+    argv = ["-m", "repro.conformance.matrix", "--arch", arch,
+            "--devices", str(int(devices))] + list(extra_args)
+    return run_json(argv, devices=devices, timeout=timeout)

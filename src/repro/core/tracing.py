@@ -207,6 +207,10 @@ class _Tracer:
         length = int(p["length"])
         num_consts = int(p["num_consts"])
         num_carry = int(p["num_carry"])
+        # grad-of-scan emits reverse scans: iteration ``it`` of the
+        # execution order consumes xs[length-1-it] and writes ys at that
+        # same index (jax semantics: ys positions always mirror xs)
+        reverse = bool(p.get("reverse", False))
         unroll = length if self.record else min(length, self.max_scan_unroll)
         cost_mult = length / unroll
         const_in = eqn.invars[:num_consts]
@@ -252,14 +256,16 @@ class _Tracer:
                 if s is None:
                     continue
                 if self.record:
-                    # emit an explicit slice node: xs[it]
+                    # emit an explicit slice node: xs[idx] (idx runs
+                    # backwards for reverse scans)
+                    idx = length - 1 - it if reverse else it
                     aval = iv.aval
                     nb = _aval_bytes(aval)
                     nid = self._node(comp=0.0, mem=nb, ntype=NORMAL,
-                                     name=f"scan_slice_{it}",
+                                     name=f"scan_slice_{idx}",
                                      bytes_touched=nb)
                     self._edge(s[0], nid, nb)
-                    self.program[nid] = ("__scan_slice__", {"index": it},
+                    self.program[nid] = ("__scan_slice__", {"index": idx},
                                          [("slot", s[0], s[1])])
                     self.n_outputs[nid] = 1
                     inner_env[iv] = (nid, 0)
@@ -291,9 +297,13 @@ class _Tracer:
         for ov, s in zip(eqn.outvars[:num_carry], carry_slots):
             if s is not None:
                 env[ov] = s
-        # stacked ys: emit a stack node per output when recording
+        # stacked ys: emit a stack node per output when recording; a
+        # reverse scan writes execution-iteration ``it`` at stacked
+        # index ``length-1-it``, so the stack order flips
         for j, ov in enumerate(eqn.outvars[num_carry:]):
-            slots = [s for s in ys_collect[j] if s is not None]
+            ordered = (list(reversed(ys_collect[j])) if reverse
+                       else ys_collect[j])
+            slots = [s for s in ordered if s is not None]
             if not slots:
                 continue
             if self.record:

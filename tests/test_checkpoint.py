@@ -1,0 +1,106 @@
+"""CheckpointManager: atomic sharded save/restore round-trips, async
+writes, raw-dtype (bf16) handling, and keep_last garbage collection."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(scale=1.0):
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4) * scale,
+            "b": np.ones((4,), np.float32) * scale,
+            "opt": {"mu": np.full((3, 4), 0.5, np.float32) * scale,
+                    "count": np.array(7, np.int32)}}
+
+
+def test_save_restore_round_trip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    path = mgr.save(100, tree, extra={"lr": 0.1})
+    assert os.path.isdir(path) and not path.endswith(".tmp")
+    out, extra = mgr.restore(_tree(scale=0.0), step=100)
+    assert extra == {"lr": 0.1}
+    for r, o in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+        assert np.asarray(o).dtype == np.asarray(r).dtype
+
+
+def test_restore_latest_by_default(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(scale=1.0))
+    mgr.save(2, _tree(scale=2.0))
+    out, _ = mgr.restore(_tree())
+    np.testing.assert_array_equal(out["b"], np.ones(4, np.float32) * 2.0)
+    assert mgr.latest_step() == 2
+
+
+def test_bf16_raw_round_trip(tmp_path):
+    """npy can't store ml_dtypes natively; the raw-bytes path must
+    round-trip bf16 bit-exactly."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.asarray(np.linspace(-3, 3, 16).reshape(4, 4),
+                             jnp.bfloat16)}
+    mgr.save(5, tree)
+    idx = json.load(open(os.path.join(mgr._step_dir(5), "index.json")))
+    assert idx["leaves"][0]["raw"] is True
+    out, _ = mgr.restore({"w": jnp.zeros((4, 4), jnp.bfloat16)}, step=5)
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]).view(np.uint16),
+        np.asarray(tree["w"]).view(np.uint16))
+
+
+def test_save_async_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(3, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 3
+    out, _ = mgr.restore(_tree(scale=0.0))
+    np.testing.assert_array_equal(out["w"], _tree()["w"])
+
+
+def test_keep_last_gc_never_removes_newest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(scale=float(s)))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_stale_tmp_dir_cleaned_and_ignored(tmp_path):
+    """A crashed mid-save leaves step_*.tmp; it must never be listed as
+    a checkpoint and the next save sweeps it."""
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+    assert mgr.latest_step() is None
+    assert mgr.all_steps() == []
+    mgr.save(10, _tree())
+    assert not any(n.endswith(".tmp") for n in os.listdir(str(tmp_path)))
+
+
+def test_restore_rejects_leaf_count_mismatch(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    with pytest.raises(ValueError, match="leaves"):
+        mgr.restore({"only": np.zeros(3, np.float32)}, step=1)
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    bad = _tree()
+    bad["w"] = np.zeros((5, 5), np.float32)
+    with pytest.raises(ValueError, match="shape"):
+        mgr.restore(bad, step=1)
+
+
+def test_restore_empty_directory_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_tree())

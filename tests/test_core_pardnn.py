@@ -304,3 +304,73 @@ def test_property_emulator_deterministic(g, k):
     s1 = emulate_fifo(g, p.assignment, k)
     s2 = emulate_fifo(g, p.assignment, k)
     assert np.array_equal(s1.st, s2.st) and np.array_equal(s1.ft, s2.ft)
+
+
+# ------------------------------------------- property tests: matrix flank
+# (checks factored as plain helpers so the scenario-matrix harness and
+# non-hypothesis environments can reuse them)
+def synthetic_program(g: CostGraph):
+    """A :class:`TracedProgram` skeleton over ``g``'s topology — enough
+    structure for segment cutting (the cutter never executes prims)."""
+    from repro.core.executor import TracedProgram
+    program = {}
+    preds = {u: [] for u in range(g.n)}
+    for u in range(g.n):
+        for v, _ in g.out_edges[u]:
+            preds[v].append(u)
+    for u in range(g.n):
+        program[u] = ("__synthetic__", {},
+                      [("slot", p, 0) for p in sorted(preds[u])])
+    sinks = [u for u in range(g.n) if not g.out_edges[u]]
+    return TracedProgram(program=program,
+                         n_outputs={u: 1 for u in range(g.n)},
+                         input_nodes=[], const_nodes=[],
+                         out_slots=[(s, 0) for s in sinks],
+                         out_tree=None, in_tree_example=None)
+
+
+def check_segment_cut(g: CostGraph, k: int) -> None:
+    from repro.core.segments import cut_segments
+    p = pardnn_partition(g, k)
+    prog = synthetic_program(g)
+    sched = cut_segments(prog, p.assignment, k=k)
+    # exact cover: every node in exactly one segment
+    placed = [n for seg in sched.segments for n in seg.nodes]
+    assert sorted(placed) == list(range(g.n))
+    pos = {n: seg.sid for seg in sched.segments for n in seg.nodes}
+    for seg in sched.segments:
+        # homogeneous device per segment, matching the placement
+        assert all(int(p.assignment[n]) == seg.device for n in seg.nodes)
+        # acyclic schedule: cross-segment dataflow only points backwards
+        for src, _ in seg.inputs:
+            assert pos[src] < seg.sid
+    # maximality: adjacent segments sit on different devices
+    for a, b in zip(sched.segments, sched.segments[1:]):
+        assert a.device != b.device
+
+
+def check_memory_profile_under_cap(g: CostGraph, k: int) -> None:
+    """Step-2's feasibility verdict must be confirmed by an independent
+    re-emulation: schedule the placed graph and recompute the per-device
+    profile from scratch — it may never exceed the cap it was given."""
+    base = pardnn_partition(g, k)
+    cap = float(np.max(base.peak_mem)) * 0.8 + 1e-9
+    p = pardnn_partition(g, k, mem_caps=cap)
+    sched = emulate(g, p.assignment, k)
+    prof = compute_profile(g, p.assignment, sched, k)
+    assert prof.peak.shape == (k,)
+    if p.feasible:
+        assert (prof.peak <= cap * (1 + 1e-9) + 1e-6).all(), (
+            prof.peak, cap)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dag_strategy(), st.integers(min_value=2, max_value=5))
+def test_property_segment_cut_acyclic_exact_cover(g, k):
+    check_segment_cut(g, k)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dag_strategy(), st.integers(min_value=2, max_value=5))
+def test_property_recomputed_profile_under_cap(g, k):
+    check_memory_profile_under_cap(g, k)

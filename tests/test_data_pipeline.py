@@ -1,0 +1,81 @@
+"""Deterministic data pipeline: pure (cfg, step) → batch, prefetching
+iterator, and the checkpoint-resume contract (restart at step N yields
+exactly the stream the crashed run would have seen)."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, DataIterator, make_batch
+
+
+def test_make_batch_shapes_and_dtypes():
+    cfg = DataConfig(batch_size=4, seq_len=16, vocab_size=1000)
+    b = make_batch(cfg, 0)
+    assert set(b) == {"tokens", "targets"}
+    assert b["tokens"].shape == (4, 16) and b["targets"].shape == (4, 16)
+    assert b["tokens"].dtype == np.int32
+    assert (b["tokens"] >= 0).all() and (b["tokens"] < 1000).all()
+    # next-token objective: targets are the stream shifted by one
+    cfg1 = DataConfig(batch_size=2, seq_len=8)
+    b1 = make_batch(cfg1, 3)
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+
+
+def test_make_batch_pure_and_step_dependent():
+    cfg = DataConfig(batch_size=2, seq_len=8, seed=7)
+    a1, a2 = make_batch(cfg, 5), make_batch(cfg, 5)
+    np.testing.assert_array_equal(a1["tokens"], a2["tokens"])
+    b = make_batch(cfg, 6)
+    assert not np.array_equal(a1["tokens"], b["tokens"])
+    c = make_batch(DataConfig(batch_size=2, seq_len=8, seed=8), 5)
+    assert not np.array_equal(a1["tokens"], c["tokens"])
+
+
+def test_embed_dim_emits_frontend_batches():
+    cfg = DataConfig(batch_size=2, seq_len=8, embed_dim=32)
+    b = make_batch(cfg, 0)
+    assert set(b) == {"embeds", "targets"}
+    assert b["embeds"].shape == (2, 8, 32)
+    assert b["embeds"].dtype == np.float32
+    assert np.isfinite(b["embeds"]).all()
+
+
+def test_iterator_matches_pure_function_in_order():
+    cfg = DataConfig(batch_size=2, seq_len=8, prefetch=2)
+    it = DataIterator(cfg)
+    try:
+        for step in range(5):
+            got = next(it)
+            want = make_batch(cfg, step)
+            np.testing.assert_array_equal(got["tokens"], want["tokens"])
+        assert it.state() == {"step": 5, "seed": 0}
+    finally:
+        it.close()
+
+
+def test_iterator_resume_reproduces_stream():
+    """Restart from a checkpointed state: the resumed iterator emits
+    exactly what the uninterrupted run would have."""
+    cfg = DataConfig(batch_size=2, seq_len=8, seed=3)
+    it = DataIterator(cfg)
+    try:
+        full = [next(it) for _ in range(6)]
+    finally:
+        it.close()
+    resumed = DataIterator(cfg, start_step=3)
+    try:
+        for step in (3, 4, 5):
+            got = next(resumed)
+            np.testing.assert_array_equal(got["tokens"],
+                                          full[step]["tokens"])
+            np.testing.assert_array_equal(got["targets"],
+                                          full[step]["targets"])
+    finally:
+        resumed.close()
+
+
+def test_iterator_close_stops_producer():
+    cfg = DataConfig(batch_size=2, seq_len=8, prefetch=1)
+    it = DataIterator(cfg)
+    next(it)
+    it.close()
+    it._thread.join(timeout=5)
+    assert not it._thread.is_alive()

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config, reduced,
+                           shape_skip_reason)
 from repro.models import (decode_step, init_params, loss_fn, prefill)
 from repro.models.transformer import embed_inputs, forward, lm_head_weight
 
@@ -33,12 +34,13 @@ def test_train_step_smoke(arch):
     assert 3.0 < float(loss) < 12.0  # ~ln(vocab) at init
 
 
-@pytest.mark.parametrize("arch", ["mixtral-8x7b", "deepseek-v2-lite-16b",
-                                  "rwkv6-7b", "jamba-v0.1-52b",
-                                  "gemma3-1b"])
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
 def test_decode_matches_full_forward(arch):
     """KV/state caches (GQA, MLA-absorbed, Mamba, RWKV) are exact."""
     cfg = reduced(get_config(arch))
+    reason = shape_skip_reason(cfg, SHAPES["decode_32k"])
+    if reason:
+        pytest.skip(f"{arch}: {reason}")
     params = init_params(cfg, KEY)
     B, S, MAX = 2, 12, 24
     batch = _batch(cfg, B, S)
@@ -56,8 +58,7 @@ def test_decode_matches_full_forward(arch):
                                atol=2e-3, rtol=2e-3)
 
 
-@pytest.mark.parametrize("arch", ["granite-8b", "mixtral-8x7b",
-                                  "hubert-xlarge"])
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
 def test_gradients_finite(arch):
     cfg = reduced(get_config(arch))
     params = init_params(cfg, KEY)

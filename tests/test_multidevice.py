@@ -1,25 +1,10 @@
 """Multi-device behaviour on forced host devices (subprocess: the device
 count must be fixed before jax initializes, and the main test process
-must keep seeing 1 device)."""
-import os
-import subprocess
-import sys
-import textwrap
-
+must keep seeing 1 device). The forced-mesh env/subprocess machinery is
+shared with the conformance matrix (``repro.conformance.subproc``)."""
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_py(code: str, devices: int = 4, timeout: int = 420) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=timeout,
-                       env=env)
-    assert r.returncode == 0, r.stderr[-3000:]
-    return r.stdout
+from repro.conformance import run_py
 
 
 def test_dp_tp_train_step_matches_single_device():

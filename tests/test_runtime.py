@@ -10,38 +10,21 @@ runtime are pinned exactly equal (deterministic executables).
 
 In-process tests run on the default (single) device; multi-device
 behaviour runs in subprocesses with forced host devices (the device
-count must be fixed before jax initializes — same pattern as
-tests/test_multidevice.py).
+count must be fixed before jax initializes) via the shared helper in
+``repro.conformance.subproc``.
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.conformance import run_py
 from repro.core import pardnn_partition
 from repro.core.errors import PlanValidationError
 from repro.core.executor import compute_liveness, execute
 from repro.core.runtime import CompiledRuntime
 from repro.core.segments import cut_segments, device_topo_order
 from repro.core.tracing import trace_cost_graph
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_py(code: str, devices: int = 4, timeout: int = 420) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=timeout,
-                       env=env)
-    assert r.returncode == 0, r.stderr[-3000:]
-    return r.stdout
 
 
 def _mlp(params, x):
@@ -295,6 +278,30 @@ def test_runtime_frees_buffers_below_all_live_baseline():
     all_live = 24 * 64 * 64 * 4
     measured = sum(rt.stats.peak_live_bytes)
     assert measured < all_live, (measured, all_live)
+
+
+def test_compiled_grad_of_scan_matches_interpreter_and_reference():
+    """Regression companion to the tracer's reverse-scan fix: the
+    backward pass of a scanned model is itself a reverse scan, and both
+    engines must replay it identically to ``jax.grad`` (pre-fix, both
+    engines agreed with each other and disagreed with the truth)."""
+    params, x = _example()
+    grad_fn = jax.grad(_mlp)
+    ref = grad_fn(params, x)
+    g, prog = trace_cost_graph(grad_fn, params, x, record=True)
+    p = pardnn_partition(g, 3)
+    devs = [jax.devices()[0]] * 3
+    out_i = execute(prog, p.assignment, devs, params, x)
+    out_c = CompiledRuntime(prog, p.assignment, devs)(params, x)
+    for c, i, r in zip(jax.tree_util.tree_leaves(out_c),
+                       jax.tree_util.tree_leaves(out_i),
+                       jax.tree_util.tree_leaves(ref)):
+        c, i = np.asarray(c), np.asarray(i)
+        assert c.dtype == i.dtype and c.shape == i.shape
+        # gradient leaves have near-zero elements where segment-fusion
+        # rounding differences land above the scalar contract's 1e-8
+        np.testing.assert_allclose(c, i, rtol=2e-6, atol=1e-7)
+        np.testing.assert_allclose(c, np.asarray(r), rtol=1e-5, atol=1e-7)
 
 
 # --------------------------------------------------------- multi-device

@@ -1,0 +1,77 @@
+"""Tier-1 face of the conformance matrix (see ``repro.conformance``).
+
+One test per registered architecture: subprocess on a forced 4-device
+host mesh, full trace → partition → compiled-execute → train-step loop,
+asserting the record came back with zero conformance violations. A spec
+carrying ``skip_reason`` skips *with that reason asserted* — a config
+can only leave the matrix by saying why.
+
+The per-arch loop is compile-heavy (jamba alone cuts ~850 segments), so
+the big configs run only under ``REPRO_MATRIX_FULL=1`` (the CI
+``scenario-matrix`` job and ``benchmarks/bench_scenario_matrix.py``);
+tier-1 always runs a representative light subset covering every block
+family (dense GQA, MoE top-k, MLA, recurrent RWKV, conv frontend).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.conformance import (ArchSpec, build_matrix, matrix_archs,
+                               run_arch_subprocess, spec_for)
+
+#: always-run subset: one representative per block family, small graphs
+LIGHT_ARCHS = [
+    "granite-8b",        # dense GQA + SGD reference baseline
+    "mixtral-8x7b",      # MoE top-k routing
+    "deepseek-v2-lite-16b",  # MLA + MoE
+    "rwkv6-7b",          # recurrent scan blocks
+    "hubert-xlarge",     # conv frontend, encoder-only
+]
+
+FULL = os.environ.get("REPRO_MATRIX_FULL", "") == "1"
+ARCHS = matrix_archs() if FULL else LIGHT_ARCHS
+
+
+def test_matrix_covers_every_registered_config():
+    """A 14th config added to the registry joins the matrix for free."""
+    assert set(matrix_archs()) == set(REGISTRY)
+    for spec in build_matrix().values():
+        assert isinstance(spec, ArchSpec)
+        assert spec.devices >= 4
+
+
+def test_light_subset_is_registered():
+    assert set(LIGHT_ARCHS) <= set(matrix_archs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_loop_conformance(arch):
+    spec = spec_for(arch)
+    if spec.skip_reason:
+        pytest.skip(f"{arch}: {spec.skip_reason}")
+    rec = run_arch_subprocess(arch, devices=spec.devices,
+                              timeout=spec.timeout)
+    assert rec["violations"] == [], (
+        f"{arch} conformance violations:\n  " + "\n  ".join(rec["violations"]))
+    assert rec["ok"] and not rec["skipped"]
+    # the record is complete and sane, not just violation-free
+    assert rec["feasible"]
+    assert rec["num_nodes"] > 0
+    assert rec["num_segments"] >= 1
+    assert len(rec["predicted_peak_bytes"]) == spec.devices
+    assert len(rec["measured_peak_bytes"]) == spec.devices
+    assert sum(rec["segments_per_device"]) == rec["num_segments"]
+    assert rec["transfers"] <= rec["cut_edges"]
+    assert np.isfinite(rec["loss"])
+    # equality headroom actually observed, not just under the gate
+    assert rec["compiled_vs_interpreter_max_diff"] <= spec.ci_atol
+    assert rec["compiled_vs_reference_max_diff"] <= spec.ref_atol
+
+
+def test_spec_overrides_round_trip():
+    spec = spec_for("granite-8b", periods=3, devices=8)
+    assert spec.periods == 3 and spec.devices == 8
+    # base spec untouched (frozen dataclass + replace)
+    assert spec_for("granite-8b").periods == 2
