@@ -36,6 +36,7 @@ from typing import Callable, Iterable, Mapping, Sequence
 
 import numpy as np
 
+from .core import errors as _E
 from .core.costmodel import DeviceModel, TPU_V5E
 from .core.errors import PlanValidationError
 from .core.executor import TracedProgram, execute as _execute
@@ -289,6 +290,9 @@ class PlanReport:
     # predicted-vs-measured scorecard from accuracy_report(): per-stage
     # (segment) MAPE, per-device MAPE, makespan error (repro.profiling)
     accuracy: dict = field(default_factory=dict)
+    # static-verification summary from plan.verify() (repro.analysis):
+    # severity counts, per-code counts, passes run, error/warn findings
+    diagnostics: dict = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {"makespan_s": self.makespan_s,
@@ -298,7 +302,8 @@ class PlanReport:
                 "stage_seconds": self.stage_seconds,
                 "counters": self.counters,
                 "runtime": self.runtime,
-                "accuracy": self.accuracy}
+                "accuracy": self.accuracy,
+                "diagnostics": self.diagnostics}
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanReport":
@@ -309,7 +314,8 @@ class PlanReport:
                    stage_seconds=dict(d.get("stage_seconds", {})),
                    counters=dict(d.get("counters", {})),
                    runtime=dict(d.get("runtime", {})),
-                   accuracy=dict(d.get("accuracy", {})))
+                   accuracy=dict(d.get("accuracy", {})),
+                   diagnostics=dict(d.get("diagnostics", {})))
 
     @classmethod
     def from_placement(cls, p: Placement) -> "PlanReport":
@@ -378,6 +384,40 @@ class PartitionPlan:
                 f"feasible={r.feasible}, moved={r.moved_nodes}, "
                 f"peaks [{peaks}]")
 
+    # -- static verification ------------------------------------------------
+    def verify(self, *, strict: bool = False):
+        """Statically verify this plan (``repro.analysis``): placement
+        holes, schedule liveness (use-after-free / double-free / bad
+        donation), transfer completeness, deadlock/acyclicity, and —
+        with a bound trace — the per-device peak-memory certificate.
+        Nothing executes.
+
+        Returns the :class:`~repro.analysis.DiagnosticReport` (cached
+        until the assignment or bound trace changes) and records its
+        summary in ``report.diagnostics``. With ``strict=True``,
+        error-severity findings raise :class:`PlanValidationError`
+        (code RP107) — the mode :meth:`save` and :meth:`execute` use.
+        """
+        from .analysis import analyze_plan
+        key = (id(self.traced),
+               None if self.traced is None else id(self.traced.program),
+               hashlib.sha256(np.ascontiguousarray(
+                   self.assignment, dtype=np.int64).tobytes()).hexdigest(),
+               self.k)
+        cached = getattr(self, "_verify_cache", None)
+        if cached is not None and cached[0] == key:
+            report = cached[1]
+        else:
+            report = analyze_plan(self)
+            self._verify_cache = (key, report)
+            self.report.diagnostics = report.summary_dict()
+        if strict and report.has_errors():
+            raise PlanValidationError(
+                "static plan verification failed:\n"
+                + report.render(max_findings=10),
+                code=_E.RP107_VERIFICATION_FAILED)
+        return report
+
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> str:
         """Write the plan: ``path`` (JSON header) + sibling ``.npz``.
@@ -385,7 +425,13 @@ class PartitionPlan:
         The header records the schema version, graph fingerprint, a
         sha256 of the assignment payload, the full report, and user
         metadata; the npz holds the arrays bit-for-bit. Returns ``path``.
+
+        The plan is statically verified first (:meth:`verify`) — a plan
+        carrying error-severity diagnostics is refused rather than
+        persisted; the diagnostic summary is serialized in the header's
+        report.
         """
+        self.verify(strict=True)
         apath = _npz_path(path)
         assignment = np.ascontiguousarray(self.assignment, dtype=np.int64)
         arrays = {"assignment": assignment,
@@ -436,7 +482,8 @@ class PartitionPlan:
             raise PlanValidationError(
                 f"{path}: unknown plan schema version {ver!r}; this build "
                 f"supports {list(KNOWN_SCHEMA_VERSIONS)} — regenerate the "
-                f"plan with repro.partition or upgrade the library")
+                f"plan with repro.partition or upgrade the library",
+                code=_E.RP101_SCHEMA_UNKNOWN)
         apath = os.path.join(os.path.dirname(os.path.abspath(path)),
                              header["assignment_file"])
         with np.load(apath) as z:
@@ -449,11 +496,13 @@ class PartitionPlan:
             raise PlanValidationError(
                 f"{path}: assignment payload corrupted "
                 f"(sha256 {digest[:12]}… != header "
-                f"{header['assignment_sha256'][:12]}…)")
+                f"{header['assignment_sha256'][:12]}…)",
+                code=_E.RP103_PAYLOAD_CORRUPT)
         if assignment.shape[0] != header["num_nodes"]:
             raise PlanValidationError(
                 f"{path}: assignment has {assignment.shape[0]} nodes, "
-                f"header says {header['num_nodes']}")
+                f"header says {header['num_nodes']}",
+                code=_E.RP103_PAYLOAD_CORRUPT)
         report = PlanReport.from_dict(header["report"])
         # npz carries the peaks bit-for-bit; trust it over the JSON floats
         report.peak_mem_bytes = [float(x) for x in peak_mem]
@@ -477,10 +526,11 @@ class PartitionPlan:
                 f"graph fingerprint mismatch: plan was computed for "
                 f"{self.fingerprint[:16]}…, got {traced.fingerprint[:16]}… "
                 f"— the model, shapes, or cost model changed; re-run "
-                f"repro.partition")
+                f"repro.partition", code=_E.RP102_FINGERPRINT_MISMATCH)
         if traced.graph.n != self.n:
             raise PlanValidationError(
-                f"graph has {traced.graph.n} nodes, plan has {self.n}")
+                f"graph has {traced.graph.n} nodes, plan has {self.n}",
+                code=_E.RP102_FINGERPRINT_MISMATCH)
         self.traced = traced
         return self
 
@@ -496,21 +546,23 @@ class PartitionPlan:
             if len(device_map) < self.k:
                 raise PlanValidationError(
                     f"device_map has {len(device_map)} entries, plan "
-                    f"uses {self.k} PEs")
+                    f"uses {self.k} PEs", code=_E.RP104_DEVICE_MISMATCH)
             bad = [i for i in device_map
                    if i < 0 or i >= len(devices)]
             if bad:
                 raise PlanValidationError(
                     f"device_map entries {bad} out of range: "
                     f"{len(devices)} jax devices available (indices "
-                    f"0..{len(devices) - 1})")
+                    f"0..{len(devices) - 1})",
+                    code=_E.RP104_DEVICE_MISMATCH)
             devices = [devices[i] for i in device_map]
         if len(devices) < self.k:
             raise PlanValidationError(
                 f"plan uses {self.k} PEs but only {len(devices)} jax "
                 f"devices are available — pass device_map= (pe -> device "
                 f"index, e.g. device_map=[0]*{self.k} to fold onto one "
-                f"device) to alias PEs explicitly")
+                f"device) to alias PEs explicitly",
+                code=_E.RP104_DEVICE_MISMATCH)
         return devices
 
     def execute(self, *args, devices=None, device_map=None,
@@ -542,7 +594,9 @@ class PartitionPlan:
         if self.traced is None or self.traced.program is None:
             raise PlanValidationError(
                 "plan has no executable program: trace with record=True "
-                "and partition (or PartitionPlan.bind) before execute()")
+                "and partition (or PartitionPlan.bind) before execute()",
+                code=_E.RP106_PLAN_NOT_EXECUTABLE)
+        self.verify(strict=True)
         if runtime is None:
             runtime = os.environ.get("REPRO_RUNTIME", "compiled")
         if runtime not in RUNTIMES:
@@ -591,7 +645,8 @@ class PartitionPlan:
         if self.traced is None or self.traced.program is None:
             raise PlanValidationError(
                 "accuracy_report needs a bound trace recorded with "
-                "record=True (the plan must be executable)")
+                "record=True (the plan must be executable)",
+                code=_E.RP106_PLAN_NOT_EXECUTABLE)
         # ensure the compiled runtime exists (and reuse its cache); this
         # call already runs the program end-to-end and pays compilation,
         # so profile_segments can skip its own warmup pass

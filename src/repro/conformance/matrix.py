@@ -20,6 +20,10 @@ and checks, per arch:
   * **placement sanity** — every node placed exactly once on a device in
     ``[0, K)``, the plan feasible, and the Step-2 predicted peaks within
     the memory limit the partitioner was given;
+  * **static verification** — ``plan.verify()`` (``repro.analysis``)
+    reports zero error-severity diagnostics (use-after-free, bad
+    donation, missing transfer, deadlock, cap overflow, …); the
+    diagnostic summary is serialized into the record;
   * **memory fidelity** — measured per-device peak live bytes within
     ``peak_factor × predicted + peak_slack`` (transfer copies and
     committed residents make measured exceed the node-level prediction
@@ -271,6 +275,21 @@ def run_conformance(spec: ArchSpec, save_dir: str | None = None) -> dict:
             violations.append(
                 f"device {pe}: predicted peak {peak:.3g} B exceeds the "
                 f"limit {spec.mem_cap:.3g} B the partitioner was given")
+
+    # --- static verification (repro.analysis) ------------------------------
+    # every error-severity diagnostic is a conformance violation; the
+    # full summary (counts, per-code, passes run) lands in the record
+    t0 = time.perf_counter()
+    vrep = plan.verify()
+    rec["verify_s"] = time.perf_counter() - t0
+    rec["diagnostics"] = vrep.summary_dict()
+    for d in vrep.errors:
+        violations.append(f"static verification: {d}")
+    if vrep.has_errors():
+        # execute() re-runs verification in strict mode and would raise;
+        # report the broken plan as a complete record instead of crashing
+        rec.update(violations=violations, ok=False, skipped=False)
+        return rec
 
     # --- compiled execution on the real mesh -------------------------------
     t0 = time.perf_counter()

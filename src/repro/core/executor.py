@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .errors import PlanValidationError
+from .errors import RP104_DEVICE_MISMATCH, PlanValidationError
 
 
 @dataclass
@@ -101,7 +101,7 @@ def validate_device_count(assignment: np.ndarray | None,
             f"devices implicitly (that voids the plan's per-device "
             f"memory guarantees). Pass an explicit device_map (e.g. "
             f"device_map=[0]*{max_pe + 1} to fold onto one device) or "
-            f"run with more devices.")
+            f"run with more devices.", code=RP104_DEVICE_MISMATCH)
 
 
 def execute(prog: TracedProgram, assignment: np.ndarray | None,

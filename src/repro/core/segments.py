@@ -38,7 +38,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .errors import PlanValidationError
+from .errors import RP104_DEVICE_MISMATCH, PlanValidationError
 from .executor import TracedProgram
 
 Slot = tuple[int, int]
@@ -146,7 +146,8 @@ def cut_segments(prog: TracedProgram, assignment: np.ndarray | None,
     if k is not None and used_k > k:
         raise PlanValidationError(
             f"placement uses {used_k} PEs but the runtime was given "
-            f"{k} devices — pass an explicit device_map or more devices")
+            f"{k} devices — pass an explicit device_map or more devices",
+            code=RP104_DEVICE_MISMATCH)
     k = used_k if k is None else k
 
     # --- run cutting -------------------------------------------------------

@@ -257,7 +257,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
 
 def run_pardnn_plan(arch: str, devices: int, out_dir: str,
                     mem_cap_mb: float | None = None,
-                    execute: bool = False) -> dict:
+                    execute: bool = False, lint: bool = False) -> dict:
     """Trace the arch's reduced train step and emit a versioned
     :class:`repro.api.PartitionPlan` artifact (JSON header + npz).
 
@@ -267,7 +267,13 @@ def run_pardnn_plan(arch: str, devices: int, out_dir: str,
     compiled segment runtime — and the result records the
     interpreter-vs-compiled speedup plus measured-vs-predicted peak
     bytes per device, the execution-side counterpart of the
-    memory_analysis numbers the mesh cells above report."""
+    memory_analysis numbers the mesh cells above report.
+
+    With ``lint=True`` the program is recorded even without execution so
+    the full static verifier (``repro.analysis``) can run, and the
+    diagnostic report is written next to the plan. Either way
+    ``plan.save`` refuses to write a plan carrying error-severity
+    diagnostics — the caller sees the raise, not a silent artifact."""
     import repro
     from repro.configs import reduced
     from repro.models import init_params, loss_fn, smoke_batch
@@ -276,7 +282,7 @@ def run_pardnn_plan(arch: str, devices: int, out_dir: str,
     params = init_params(cfg, jax.random.PRNGKey(0))
     batch = smoke_batch(cfg)
     traced = repro.trace(lambda p: loss_fn(cfg, p, batch)[0], params,
-                         record=execute)
+                         record=execute or lint)
     plan = repro.partition(
         traced, devices=devices,
         memory=mem_cap_mb * 1e6 if mem_cap_mb else None,
@@ -284,6 +290,15 @@ def run_pardnn_plan(arch: str, devices: int, out_dir: str,
     path = os.path.join(out_dir, f"{arch}__pardnn_k{devices}.plan.json")
     res = {"arch": arch, "ops": plan.n, "path": path,
            "makespan_s": plan.makespan, "feasible": plan.feasible}
+    vrep = plan.verify()
+    res["diagnostics"] = vrep.summary_dict()
+    res["verify_errors"] = len(vrep.errors)
+    if lint:
+        lpath = os.path.join(out_dir,
+                             f"{arch}__pardnn_k{devices}.diagnostics.json")
+        with open(lpath, "w") as f:
+            json.dump(vrep.to_dict(), f, indent=1)
+        res["diagnostics_path"] = lpath
     if execute:
         res["runtime"] = plan.benchmark_runtimes(params, reps=1)
         plan.meta["runtime"] = res["runtime"]
@@ -336,7 +351,7 @@ def cell_name(arch, shape, mesh_kind, tag=""):
     return f"{arch}__{shape}__{mesh_kind}{t}"
 
 
-def main():
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -357,6 +372,10 @@ def main():
                     help="also run the plan through both execution "
                          "engines and report interpreter-vs-compiled "
                          "speedup + measured-vs-predicted peak bytes")
+    ap.add_argument("--lint", action="store_true",
+                    help="with --pardnn: record the program so the full "
+                         "static verifier runs, and write each plan's "
+                         "diagnostic report next to its artifact")
     ap.add_argument("--calibrate", action="store_true",
                     help="profile real op/link costs, fit the device "
                          "model, save a CalibrationProfile per arch and "
@@ -387,20 +406,25 @@ def main():
                       f"({time.perf_counter() - t0:.1f}s)", flush=True)
             except Exception as e:
                 print(f"[FAIL] {a}: {type(e).__name__}: {e}", flush=True)
-        return
+        return 0
 
     if args.pardnn:
         os.makedirs(args.out, exist_ok=True)
         archs = ASSIGNED_ARCHS if args.arch is None else [args.arch]
+        failed = 0
         for a in archs:
             t0 = time.perf_counter()
             try:
                 res = run_pardnn_plan(a, args.pardnn_devices, args.out,
                                       args.pardnn_mem_cap_mb,
-                                      execute=args.pardnn_execute)
+                                      execute=args.pardnn_execute,
+                                      lint=args.lint)
+                dcounts = res["diagnostics"]["counts"]
                 print(f"[OK] {a}: {res['ops']} ops, makespan "
                       f"{res['makespan_s'] * 1e3:.3f} ms, "
-                      f"feasible={res['feasible']} -> {res['path']} "
+                      f"feasible={res['feasible']}, verified "
+                      f"({dcounts['error']}E/{dcounts['warn']}W/"
+                      f"{dcounts['info']}I) -> {res['path']} "
                       f"({time.perf_counter() - t0:.1f}s)", flush=True)
                 rt = res.get("runtime")
                 if rt:
@@ -419,8 +443,11 @@ def main():
                         print(f"     WARNING: output drift "
                               f"{rt['output_drift']:.3g}", flush=True)
             except Exception as e:
+                # includes PlanValidationError RP107: plan.save refuses
+                # to write a plan with error-severity diagnostics
                 print(f"[FAIL] {a}: {type(e).__name__}: {e}", flush=True)
-        return
+                failed += 1
+        return 1 if failed else 0
 
     cells = []
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
@@ -438,7 +465,7 @@ def main():
             skip = shape_skip_reason(get_config(a), SHAPES[s])
             print(f"{cell_name(a, s, m):60s} "
                   f"{'SKIP: ' + skip if skip else 'RUN'}")
-        return
+        return 0
 
     os.makedirs(args.out, exist_ok=True)
     for a, s, m in cells:
@@ -471,7 +498,8 @@ def main():
         elif status == "FAIL":
             extra = res["error"][:200]
         print(f"[{status}] {name} ({res['wall_s']}s) {extra}", flush=True)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

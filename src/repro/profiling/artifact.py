@@ -37,7 +37,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..core.costmodel import CalibratedDeviceModel, DeviceModel
-from ..core.errors import ProfileValidationError
+from ..core.errors import (RP101_SCHEMA_UNKNOWN, RP103_PAYLOAD_CORRUPT,
+                           RP104_DEVICE_MISMATCH, ProfileValidationError)
 from .opbench import (CORRECTION_FLOOR_FRAC, OpSample, TransferSample,
                       corrected_seconds)
 
@@ -213,7 +214,8 @@ class CalibrationProfile:
                 f"{path}: unknown calibration schema version {ver!r}; "
                 f"this build supports "
                 f"{list(KNOWN_CALIB_SCHEMA_VERSIONS)} — re-run "
-                f"repro.calibrate or upgrade the library")
+                f"repro.calibrate or upgrade the library",
+                code=RP101_SCHEMA_UNKNOWN)
         apath = os.path.join(os.path.dirname(os.path.abspath(path)),
                              header["samples_file"])
         with open(apath, "rb") as f:
@@ -223,7 +225,8 @@ class CalibrationProfile:
             raise ProfileValidationError(
                 f"{path}: samples payload corrupted "
                 f"(sha256 {digest[:12]}… != header "
-                f"{header['samples_sha256'][:12]}…)")
+                f"{header['samples_sha256'][:12]}…)",
+                code=RP103_PAYLOAD_CORRUPT)
         if expect_device:
             want = (current_device_fingerprint()
                     if expect_device is True else str(expect_device))
@@ -233,7 +236,8 @@ class CalibrationProfile:
                     f"{path}: profile was measured on {got!r}, this "
                     f"environment is {want!r} — measured costs do not "
                     f"transfer across devices; re-run repro.calibrate "
-                    f"(or pass expect_device=False to override)")
+                    f"(or pass expect_device=False to override)",
+                    code=RP104_DEVICE_MISMATCH)
         import io
         with np.load(io.BytesIO(raw)) as z:
             op_chunks = _unragged(z["op_samples"], z["op_samples_indptr"])
