@@ -1,0 +1,144 @@
+"""Overlapped vs serialized dispatch: does async execution actually
+hide cross-device transfers behind compute?
+
+Traces the reduced ``repro-lm-100m`` training-step loss, partitions it
+onto a forced ``k``-host-device mesh, and times the compiled segment
+runtime both ways — overlapped (async dispatch + prefetch, the
+default) and serialized (``mode="sync"``, the blocking escape hatch).
+Both modes run the *same* compiled segments in the same order, so their
+outputs must be bit-identical; the wall-clock delta is the measured
+overlap win. The overlap emulator's predicted makespans (overlapped
+and serialized) are scored against the measured async timeline via
+``plan.accuracy_report``.
+
+Results land in ``BENCH_overlap.json`` (``--out``) so CI records the
+overlap trajectory. Gate policy (docs/ARCHITECTURE.md):
+
+  * **hard** — ``sync_async_drift == 0`` (serialized and overlapped
+    dispatch must agree exactly: same executables, same values);
+  * **not gated** — every timing (``overlap_speedup``, makespan
+    ratios). On a loaded CI box with tiny tensors the async win is
+    noise; on real meshes it is the whole point. Times are recorded
+    for humans, never asserted.
+
+    PYTHONPATH=src python benchmarks/bench_overlap.py --tiny \
+        --out BENCH_overlap.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+try:                                    # package mode (benchmarks.run)
+    from .common import emit, timed
+except ImportError:                     # standalone script mode
+    from common import emit, timed
+
+
+def run_overlap(tiny: bool = False, k: int = 4,
+                out_path: str | None = None,
+                arch: str = "repro-lm-100m") -> dict:
+    """Serialized vs overlapped dispatch on a real traced step.
+
+    Requires ``k`` host devices — run standalone so the XLA
+    device-count flag is set before jax initializes (see ``main``).
+    """
+    import jax
+    import repro
+    from repro.configs import get_config, reduced
+    from repro.models import init_params, loss_fn, smoke_batch
+
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, batch=2, seq=32) if tiny \
+        else smoke_batch(cfg, batch=4, seq=64)
+
+    traced, t_trace = timed(
+        lambda: repro.trace(lambda p: loss_fn(cfg, p, batch)[0],
+                            params, record=True))
+    plan, t_part = timed(
+        lambda: repro.partition(traced, devices=k,
+                                meta={"arch": arch, "source": "bench"}))
+    device_map = repro.fold_device_map(k)
+
+    reps = 3 if tiny else 5
+    bench = plan.benchmark_runtimes(params, device_map=device_map,
+                                    reps=reps)
+    acc = plan.accuracy_report(params, device_map=device_map, reps=reps)
+
+    res = {
+        "arch": arch, "k": k, "tiny": bool(tiny),
+        "graph_nodes": int(traced.n),
+        "trace_s": t_trace["s"], "partition_s": t_part["s"],
+        "num_segments": bench["num_segments"],
+        "transfers": bench["transfers"],
+        "transfer_bytes": bench["transfer_bytes"],
+        "prefetched_transfers": bench["prefetched_transfers"],
+        "deferred_transfers": bench["deferred_transfers"],
+        # measured walls: same compiled segments, two dispatch modes
+        "overlapped_s": bench["compiled_s"],
+        "overlapped_dispersion": bench["compiled_dispersion"],
+        "serialized_s": bench["compiled_sync_s"],
+        "serialized_dispersion": bench["compiled_sync_dispersion"],
+        "overlap_speedup": bench["overlap_speedup"],
+        # the only gated number: dispatch modes must agree exactly
+        "sync_async_drift": bench["sync_async_drift"],
+        # emulator predictions vs the measured async timeline
+        "predicted_overlap_makespan_s": acc["predicted_overlap_makespan_s"],
+        "predicted_serialized_makespan_s":
+            acc["predicted_serialized_makespan_s"],
+        "measured_async_wall_s": acc["measured_async_wall_s"],
+        "overlap_makespan_ratio": acc["overlap_makespan_ratio"],
+        "serialized_makespan_ratio": acc["serialized_makespan_ratio"],
+        "timing_modes": acc["timing_modes"],
+    }
+    emit(f"overlap/{arch}/serialized", res["serialized_s"] * 1e6,
+         f"{res['num_segments']} segments, {res['transfers']} transfers")
+    emit(f"overlap/{arch}/overlapped", res["overlapped_s"] * 1e6,
+         f"{res['overlap_speedup']:.2f}x vs serialized, "
+         f"{res['prefetched_transfers']}/{res['transfers']} prefetched "
+         f"({res['deferred_transfers']} deferred), "
+         f"drift {res['sync_async_drift']:.3g}")
+    ratio = res["overlap_makespan_ratio"]
+    emit(f"overlap/{arch}/predicted_makespan",
+         (res["predicted_overlap_makespan_s"] or 0.0) * 1e6,
+         f"measured/predicted {ratio:.2f}" if ratio is not None
+         else "no device model: no prediction")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"wrote {out_path}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="overlapped vs serialized dispatch benchmark")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--arch", default="repro-lm-100m")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--out", default=None,
+                    help="write the results JSON here "
+                         "(e.g. BENCH_overlap.json)")
+    args = ap.parse_args()
+    # must precede any jax import: give the CPU host k devices so the
+    # placement runs on real (if emulated) separate devices. Append to
+    # any pre-existing XLA_FLAGS rather than skipping.
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.devices}").strip()
+    print("name,us_per_call,derived")
+    run_overlap(tiny=args.tiny, k=args.devices, out_path=args.out,
+                arch=args.arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,21 +37,26 @@ from ..core.errors import CODES, PlanValidationError
 from ..core.segments import cut_segments
 from .diagnostics import (ERROR, INFO, SEVERITIES, WARN, Diagnostic,
                           DiagnosticReport)
-from .passes import PASSES, AnalysisContext, InterpResult, abstract_interpret
+from .passes import (PASSES, AnalysisContext, InterpResult,
+                     OverlapInterpResult, abstract_interpret,
+                     overlap_interpret)
 
 __all__ = [
     "analyze", "analyze_plan", "Diagnostic", "DiagnosticReport",
-    "AnalysisContext", "InterpResult", "abstract_interpret", "PASSES",
+    "AnalysisContext", "InterpResult", "OverlapInterpResult",
+    "abstract_interpret", "overlap_interpret", "PASSES",
     "CODES", "SEVERITIES", "ERROR", "WARN", "INFO",
 ]
 
 #: passes that need an interpretable schedule (run after placement+lint)
-_SCHEDULE_PASSES = ("structure", "deadlock", "liveness", "memory")
+_SCHEDULE_PASSES = ("structure", "deadlock", "liveness", "memory",
+                    "overlap")
 
 
 def analyze(prog=None, assignment=None, k: int = 1, *, schedule=None,
             graph=None, mem_caps=None, feasible=None,
-            predicted_peaks=None) -> DiagnosticReport:
+            predicted_peaks=None,
+            transfer_window_bytes=None) -> DiagnosticReport:
     """Run every applicable pass; never raises on a corrupt schedule.
 
     Args:
@@ -69,12 +74,16 @@ def analyze(prog=None, assignment=None, k: int = 1, *, schedule=None,
             ``mem_caps`` is an *error* only for plans claiming to fit.
         predicted_peaks: Step-2's per-device peak prediction, for the
             RP021 cross-check.
+        transfer_window_bytes: the in-flight transfer window the overlap
+            pass certifies RP040 against (None: the runtime's own
+            resolution — ``REPRO_TRANSFER_WINDOW_MB`` or 64 MiB).
     """
     rep = DiagnosticReport()
     a = None if assignment is None else np.asarray(assignment)
     ctx = AnalysisContext(prog=prog, assignment=a, k=int(k),
                           schedule=schedule, graph=graph, mem_caps=mem_caps,
-                          feasible=feasible, predicted_peaks=predicted_peaks)
+                          feasible=feasible, predicted_peaks=predicted_peaks,
+                          transfer_window_bytes=transfer_window_bytes)
     PASSES["placement"](ctx, rep)
     rep.passes_run.append("placement")
     if prog is None:

@@ -27,6 +27,15 @@ mutation               expects  seeded bug class
 ``placement_hole``     RP032   a node assigned outside ``[0, K)``
 ``refcount_inflate``   RP034   a refcount table entry too large — buffers
                                outlive their last reader (leak)
+``prefetch_rekey``     RP041   a prefetch entry keyed to a segment the
+                               schedule never dispatches — the async copy
+                               is never issued
+``prefetch_after_donation`` RP042  a prefetch registered at (or after) the
+                               segment that donates its source buffer —
+                               the device_put reads deleted memory
+``async_cap_overflow`` RP040   capacities the async (prefetch-at-producer)
+                               certificate exceeds while the plan claims
+                               feasibility
 =====================  ======  =============================================
 
 Used by ``tests/test_analysis.py`` (each class caught with the expected
@@ -44,7 +53,7 @@ from ..core.executor import TracedProgram
 from ..core.segments import SegmentSchedule, cut_segments
 from . import analyze
 from .diagnostics import DiagnosticReport
-from .passes import AnalysisContext, abstract_interpret
+from .passes import AnalysisContext, abstract_interpret, overlap_interpret
 
 
 @dataclass
@@ -79,7 +88,10 @@ def _copy_schedule(s: SegmentSchedule) -> SegmentSchedule:
         segments=list(s.segments), k=s.k,
         node_refcount=dict(s.node_refcount),
         last_consumer_seg=dict(s.last_consumer_seg),
-        num_transfer_edges=s.num_transfer_edges)
+        num_transfer_edges=s.num_transfer_edges,
+        prefetch=dict(s.prefetch),
+        last_reader_on_dev=dict(s.last_reader_on_dev),
+        producer_seg=dict(s.producer_seg))
 
 
 MutationFn = Callable[[MutableCase, np.random.Generator], bool]
@@ -278,4 +290,69 @@ def _refcount_inflate(case: MutableCase, rng: np.random.Generator) -> bool:
     if not rc:
         return False
     rc[_pick(rng, sorted(rc))] += 2
+    return True
+
+
+@_mutation("prefetch_rekey", "RP041",
+           "key a prefetch entry to a segment that never dispatches")
+def _prefetch_rekey(case: MutableCase, rng: np.random.Generator) -> bool:
+    pf = case.schedule.prefetch
+    keys = sorted(k for k in pf if pf[k])
+    if not keys:
+        return False
+    psid = _pick(rng, keys)
+    entries = list(pf[psid])
+    i = int(rng.integers(len(entries)))
+    moved = entries.pop(i)
+    if entries:
+        pf[psid] = tuple(entries)
+    else:
+        del pf[psid]
+    ghost = max(seg.sid for seg in case.schedule.segments) + 7
+    pf[ghost] = pf.get(ghost, ()) + (moved,)
+    return True
+
+
+@_mutation("prefetch_after_donation", "RP042",
+           "register a prefetch at the segment donating its source buffer")
+def _prefetch_after_donation(case: MutableCase,
+                             rng: np.random.Generator) -> bool:
+    if case.k < 2:
+        return False
+    sites: list[tuple[int, tuple[int, int], int]] = []
+    for seg in case.schedule.segments:
+        xfer = set(seg.transfer_inputs)
+        for p in seg.dead_inputs:
+            if 0 <= p < len(seg.inputs) and p not in xfer:
+                sites.append((seg.sid, seg.inputs[p], seg.device))
+    if not sites:
+        return False
+    sid, slot, dev = _pick(rng, sites)
+    dst = (dev + 1) % case.k
+    pf = case.schedule.prefetch
+    pf[sid] = pf.get(sid, ()) + ((slot, dst),)
+    return True
+
+
+@_mutation("async_cap_overflow", "RP040",
+           "claim feasibility under caps the async certificate exceeds")
+def _async_cap_overflow(case: MutableCase, rng: np.random.Generator) -> bool:
+    if case.graph is None:
+        return False
+    ctx = AnalysisContext(prog=case.prog, assignment=case.assignment,
+                          k=case.k, schedule=case.schedule, graph=case.graph)
+    apeaks = overlap_interpret(ctx).cert_peaks
+    speaks = abstract_interpret(ctx).cert_peaks
+    if apeaks is None or speaks is None or float(np.max(apeaks)) <= 0:
+        return False
+    # prefer a cap between the lazy and async certificates — that
+    # isolates the overlap-specific risk (prefetch holds copies live
+    # earlier); fall back to an unconditional breach when they coincide
+    gap = apeaks > speaks
+    if bool(np.any(gap)):
+        caps = np.where(gap, (apeaks + speaks) / 2.0, apeaks * 2.0 + 1.0)
+    else:
+        caps = apeaks * 0.5
+    case.mem_caps = caps
+    case.feasible = True
     return True

@@ -29,6 +29,16 @@ dynamically, ahead of time:
   against the plan's capacity claim (RP020) and cross-checks Step-2's
   prediction (RP021, tolerance ``4x + 8 MiB`` — the conformance
   matrix's documented measured-vs-predicted policy).
+* ``overlap`` — certifies the *async* dispatch schedule the default
+  runtime mode executes: the prefetch table is consistent (every entry
+  exported by its keyed producer — or a root for key ``-1`` — targets
+  a real device, and is registered no later than its first consumer;
+  RP041), no prefetched ``device_put`` can read a buffer a segment
+  already donated (RP042), and a second abstract interpretation with
+  *prefetch-at-producer* buffer lifetimes re-certifies the per-device
+  peaks against the capacity claim plus the in-flight transfer-window
+  bound (RP040 — async dispatch holds transferred copies live earlier
+  than the lazy schedule the ``memory`` pass certifies).
 * ``lint`` — dead nodes / unused outputs (RP031).
 
 Pass functions are registered in :data:`PASSES`; ``repro.analysis
@@ -44,6 +54,7 @@ import numpy as np
 
 from ..core import errors as E
 from ..core.executor import TracedProgram
+from ..core.runtime import _resolve_window
 from ..core.segments import SegmentSchedule, Slot
 from .diagnostics import ERROR, INFO, WARN, Diagnostic, DiagnosticReport
 
@@ -66,8 +77,13 @@ class AnalysisContext:
     mem_caps: np.ndarray | None = None      # per-device capacity bytes
     feasible: bool | None = None            # the plan's feasibility claim
     predicted_peaks: np.ndarray | None = None   # Step-2 per-device peaks
+    # in-flight transfer-window bound the overlap pass certifies
+    # against (None: REPRO_TRANSFER_WINDOW_MB env or the 64 MiB default,
+    # same resolution the runtime uses)
+    transfer_window_bytes: float | None = None
     # caches shared between passes
     _interp: "InterpResult | None" = field(default=None, repr=False)
+    _overlap: "OverlapInterpResult | None" = field(default=None, repr=False)
 
     def dev(self, nid: int) -> int:
         if self.assignment is None:
@@ -605,6 +621,310 @@ def memory_pass(ctx: AnalysisContext, rep: DiagnosticReport) -> None:
                       f"{pred[pe]:.3g} B + {PEAK_DRIFT_SLACK:.3g} B — the "
                       f"emulator's memory model has drifted from the "
                       f"schedule", "memory", device=pe)
+
+
+# ---------------------------------------------------------------------------
+# overlap: certify the async (prefetch-at-producer) dispatch schedule
+# ---------------------------------------------------------------------------
+@dataclass
+class OverlapInterpResult:
+    """Certificate of the *async* abstract interpretation: the same
+    refcount/donation/transfer replay as :func:`abstract_interpret`, but
+    with every ``device_put`` issued at its producer's dispatch (the
+    prefetch table) under the bounded in-flight transfer window —
+    exactly ``CompiledRuntime.__call__``'s async control flow."""
+
+    cert_peaks: np.ndarray | None       # per-device async peak bytes
+    peak_inflight_bytes: float = 0.0    # live transferred-copy bytes
+    prefetched: int = 0                 # copies issued at producer dispatch
+    deferred: int = 0                   # prefetches pushed past the window
+    window_bytes: float = 0.0
+
+
+def overlap_interpret(ctx: AnalysisContext) -> OverlapInterpResult:
+    """Replay the async runtime's prefetch/window/liveness schedule
+    abstractly and certify per-device peaks under *prefetch-at-producer*
+    buffer lifetimes. Structural table defects are the overlap pass's
+    job — this replay skips unissuable entries silently, like the
+    runtime's lazy fallback does. The result is cached on the context.
+    """
+    if ctx._overlap is not None:
+        return ctx._overlap
+    prog, sched = ctx.prog, ctx.schedule
+    assert prog is not None and sched is not None
+    window = _resolve_window(ctx.transfer_window_bytes)
+    track = ctx.graph is not None and len(getattr(
+        ctx.graph, "mem", [])) > 0
+    k = max(ctx.k, 1)
+    live = np.zeros(k)
+    peak = np.zeros(k)
+    inflight = 0.0
+    peak_inflight = 0.0
+    prefetched = 0
+    deferred = 0
+
+    def alloc(pe: int, nb: float) -> None:
+        if 0 <= pe < k:
+            live[pe] += nb
+            peak[pe] = max(peak[pe], live[pe])
+
+    def free_b(pe: int, nb: float) -> None:
+        if 0 <= pe < k:
+            live[pe] -= nb
+
+    roots = set(prog.input_nodes) | {nid for nid, _ in prog.const_nodes}
+    if track:
+        for nid in list(prog.input_nodes) + [n for n, _ in prog.const_nodes]:
+            alloc(ctx.dev(nid), _slot_bytes(ctx, (nid, 0))
+                  * max(prog.n_outputs.get(nid, 1), 1))
+
+    segs = sched.segments
+    slots_by_producer: dict[int, list[Slot]] = {}
+    for seg in segs:
+        for slot in seg.outputs:
+            slots_by_producer.setdefault(slot[0], []).append(slot)
+
+    produced: set[Slot] = set()
+    freed_env: set[Slot] = set()
+    donated_env: set[Slot] = set()
+    cache: set[tuple[Slot, int]] = set()
+    cache_by_src: dict[int, list[tuple[Slot, int]]] = {}
+    refcount = dict(sched.node_refcount)
+
+    def issue_prefetch(psid: int) -> None:
+        nonlocal inflight, peak_inflight, prefetched, deferred
+        for slot, dst in sched.prefetch.get(psid, ()):
+            if not 0 <= dst < k or ctx.dev(slot[0]) == dst:
+                continue        # bad target / self-transfer: static check
+            key = (slot, dst)
+            if key in cache:
+                continue
+            if slot[0] not in roots and slot not in produced:
+                continue        # not yet available: lazy fallback
+            if slot in freed_env or slot in donated_env:
+                continue        # RP042/consistency reported statically
+            nb = _slot_bytes(ctx, slot)
+            if track and inflight + nb > window:
+                deferred += 1
+                continue
+            prefetched += 1
+            alloc(dst, nb)
+            inflight += nb
+            peak_inflight = max(peak_inflight, inflight)
+            cache.add(key)
+            cache_by_src.setdefault(slot[0], []).append(key)
+
+    issue_prefetch(-1)
+    for seg in segs:
+        transfer_pos = set(seg.transfer_inputs)
+        donate_set = set(seg.dead_inputs)
+        dying_copy_bytes = 0.0
+        for pos, slot in enumerate(seg.inputs):
+            if pos not in transfer_pos or ctx.dev(slot[0]) == seg.device:
+                continue
+            key = (slot, seg.device)
+            nb = _slot_bytes(ctx, slot)
+            if key in cache:
+                if pos in donate_set:
+                    cache.discard(key)
+                    dying_copy_bytes += nb
+                    inflight -= nb
+            else:
+                # lazy issue: window-deferred or re-shipped after a free
+                alloc(seg.device, nb)
+                if pos in donate_set:
+                    dying_copy_bytes += nb
+                else:
+                    inflight += nb
+                    peak_inflight = max(peak_inflight, inflight)
+                    cache.add(key)
+                    cache_by_src.setdefault(slot[0], []).append(key)
+        for p in donate_set:
+            if 0 <= p < len(seg.inputs):
+                slot = seg.inputs[p]
+                if p in transfer_pos and ctx.dev(slot[0]) != seg.device:
+                    continue    # donates the per-device copy, not env
+                donated_env.add(slot)
+        for slot in seg.outputs:
+            if slot not in produced:
+                produced.add(slot)
+                alloc(seg.device, _slot_bytes(ctx, slot))
+        issue_prefetch(seg.sid)
+        free_b(seg.device, dying_copy_bytes)
+        for src in {s[0] for s in seg.inputs}:
+            if src not in refcount:
+                continue
+            refcount[src] -= 1
+            if refcount[src] != 0:
+                continue
+            for key in cache_by_src.pop(src, []):
+                if key in cache:
+                    cache.discard(key)
+                    nb = _slot_bytes(ctx, key[0])
+                    free_b(key[1], nb)
+                    inflight -= nb
+            if src not in roots:
+                for slot in slots_by_producer.get(src, []):
+                    if slot in produced and slot not in freed_env:
+                        freed_env.add(slot)
+                        free_b(ctx.dev(src), _slot_bytes(ctx, slot))
+
+    res = OverlapInterpResult(
+        cert_peaks=peak.copy() if track else None,
+        peak_inflight_bytes=peak_inflight, prefetched=prefetched,
+        deferred=deferred, window_bytes=window)
+    ctx._overlap = res
+    return res
+
+
+def _overlap_table_checks(ctx: AnalysisContext,
+                          rep: DiagnosticReport) -> None:
+    """RP041/RP042: the prefetch table is issuable as written."""
+    prog, sched = ctx.prog, ctx.schedule
+    assert prog is not None and sched is not None
+    segs = sched.segments
+    roots = set(prog.input_nodes) | {nid for nid, _ in prog.const_nodes}
+    sid_pos: dict[int, int] = {}
+    exports: dict[int, set[Slot]] = {}
+    for i, seg in enumerate(segs):
+        sid_pos.setdefault(seg.sid, i)
+        exports.setdefault(seg.sid, set()).update(seg.outputs)
+    # first cross-device reader position per (slot, consuming pe)
+    first_read: dict[tuple[Slot, int], int] = {}
+    for i, seg in enumerate(segs):
+        for pos in seg.transfer_inputs:
+            if not 0 <= pos < len(seg.inputs):
+                continue
+            key = (seg.inputs[pos], seg.device)
+            if key not in first_read:
+                first_read[key] = i
+    # positions donating a slot's *environment* buffer (same-device
+    # donations — the prefetch device_put would read a deleted buffer)
+    donate_pos: dict[Slot, list[int]] = {}
+    for i, seg in enumerate(segs):
+        transfer_pos = set(seg.transfer_inputs)
+        for p in seg.dead_inputs:
+            if 0 <= p < len(seg.inputs) and p not in transfer_pos:
+                donate_pos.setdefault(seg.inputs[p], []).append(i)
+
+    registered: set[tuple[Slot, int]] = set()
+    for psid in sorted(sched.prefetch):
+        for slot, dst in sched.prefetch[psid]:
+            registered.add((slot, dst))
+            if not 0 <= dst < ctx.k:
+                _diag(rep, E.RP041_DISPATCH_DEADLOCK, ERROR,
+                      f"prefetch of slot {slot} targets pe {dst}, outside "
+                      f"[0, {ctx.k})", "overlap", node=slot[0], device=dst)
+                continue
+            if psid == -1:
+                issue = -1
+                if slot[0] not in roots:
+                    _diag(rep, E.RP041_DISPATCH_DEADLOCK, ERROR,
+                          f"call-start prefetch (key -1) of slot {slot}, "
+                          f"which is not a graph input/const — nothing is "
+                          f"available to ship at call start", "overlap",
+                          node=slot[0], device=dst)
+            else:
+                pos = sid_pos.get(psid)
+                if pos is None:
+                    _diag(rep, E.RP041_DISPATCH_DEADLOCK, ERROR,
+                          f"prefetch of slot {slot} to pe {dst} is keyed "
+                          f"to segment {psid}, which the schedule never "
+                          f"dispatches — the copy is never issued",
+                          "overlap", node=slot[0], device=dst)
+                    continue
+                issue = pos
+                if slot not in exports.get(psid, set()):
+                    _diag(rep, E.RP041_DISPATCH_DEADLOCK, ERROR,
+                          f"prefetch of slot {slot} is keyed to segment "
+                          f"{psid}, which does not export it — issued at "
+                          f"that dispatch the source may not exist yet",
+                          "overlap", node=slot[0], segment=psid,
+                          device=dst)
+            f = first_read.get((slot, dst))
+            if f is None:
+                _diag(rep, E.RP030_REDUNDANT_TRANSFER, WARN,
+                      f"prefetch of slot {slot} to pe {dst}: no segment "
+                      f"on that device reads it as a transfer — a copy "
+                      f"nothing consumes", "overlap", node=slot[0],
+                      device=dst)
+            elif issue >= f:
+                _diag(rep, E.RP041_DISPATCH_DEADLOCK, ERROR,
+                      f"prefetch of slot {slot} to pe {dst} issues at "
+                      f"schedule position {issue} but its first consumer "
+                      f"(segment {segs[f].sid}) dispatches at position "
+                      f"{f} — the copy cannot arrive before its reader",
+                      "overlap", node=slot[0], segment=segs[f].sid,
+                      device=dst)
+            for q in donate_pos.get(slot, ()):
+                if issue >= q:
+                    _diag(rep, E.RP042_OVERLAP_DONATION_HAZARD, ERROR,
+                          f"prefetch of slot {slot} to pe {dst} issues at "
+                          f"schedule position {issue}, but segment "
+                          f"{segs[q].sid} (position {q}) donates that "
+                          f"buffer to XLA — the device_put would read "
+                          f"deleted memory", "overlap", node=slot[0],
+                          segment=segs[q].sid, device=dst)
+    # coverage lint: cross-device reads the table never prefetches
+    missing = sorted(key for key in first_read
+                     if key not in registered
+                     and ctx.dev(key[0][0]) != segs[first_read[key]].device)
+    for slot, dst in missing[:10]:
+        _diag(rep, E.RP040_TRANSFER_WINDOW_EXCEEDED, INFO,
+              f"cross-device read of slot {slot} on pe {dst} is never "
+              f"prefetched — it always pays consumer-time transfer "
+              f"latency", "overlap", node=slot[0], device=dst)
+    if len(missing) > 10:
+        _diag(rep, E.RP040_TRANSFER_WINDOW_EXCEEDED, INFO,
+              f"... and {len(missing) - 10} more unprefetched "
+              f"cross-device reads", "overlap")
+
+
+@analysis_pass("overlap")
+def overlap_pass(ctx: AnalysisContext, rep: DiagnosticReport) -> None:
+    """Certify the async dispatch schedule: prefetch-table consistency
+    (RP041), donation legality under overlap (RP042), and the async
+    peak/window certificate (RP040)."""
+    _overlap_table_checks(ctx, rep)
+    res = overlap_interpret(ctx)
+    if res.cert_peaks is None:
+        return
+    window = res.window_bytes
+    # single transfers the window can never admit (always lazy)
+    oversize = sorted({
+        (slot, dst) for entries in (ctx.schedule.prefetch.values()
+                                    if ctx.schedule is not None else ())
+        for slot, dst in entries
+        if _slot_bytes(ctx, slot) > window})
+    for slot, dst in oversize[:10]:
+        _diag(rep, E.RP040_TRANSFER_WINDOW_EXCEEDED, WARN,
+              f"transfer of slot {slot} to pe {dst} "
+              f"({_slot_bytes(ctx, slot):.3g} B) exceeds the in-flight "
+              f"window ({window:.3g} B) — it can never be prefetched and "
+              f"always stalls its consumer", "overlap", node=slot[0],
+              device=dst)
+    if res.peak_inflight_bytes > window:
+        _diag(rep, E.RP040_TRANSFER_WINDOW_EXCEEDED, WARN,
+              f"live transferred-copy bytes peak at "
+              f"{res.peak_inflight_bytes:.3g} B, above the "
+              f"{window:.3g} B window — lazy consumer-time copies are "
+              f"not throttled by the window, only prefetch issue is",
+              "overlap")
+    caps = ctx.mem_caps
+    if caps is not None:
+        caps_arr = np.broadcast_to(np.asarray(caps, dtype=np.float64),
+                                   res.cert_peaks.shape)
+        for pe, (p, c) in enumerate(zip(res.cert_peaks, caps_arr)):
+            if p > c:
+                sev = ERROR if ctx.feasible else WARN
+                _diag(rep, E.RP040_TRANSFER_WINDOW_EXCEEDED, sev,
+                      f"device {pe}: async-certified peak {p:.3g} B "
+                      f"(prefetch-at-producer lifetimes) exceeds the "
+                      f"capacity {c:.3g} B the plan "
+                      f"{'claims to satisfy' if ctx.feasible else 'was given (already marked infeasible)'}"
+                      f" — overlapped dispatch holds transferred copies "
+                      f"live earlier than the lazy schedule", "overlap",
+                      device=pe)
 
 
 # ---------------------------------------------------------------------------

@@ -566,7 +566,8 @@ class PartitionPlan:
         return devices
 
     def execute(self, *args, devices=None, device_map=None,
-                runtime: str | None = None, donate: bool = True, **kwargs):
+                runtime: str | None = None, donate: bool = True,
+                mode: str | None = None, **kwargs):
         """Run the recorded program under this placement (the paper's
         "placement file → execution engine" path).
 
@@ -584,6 +585,14 @@ class PartitionPlan:
                 bit-equal by the test suite.
             donate: let the compiled runtime donate dead segment inputs
                 to XLA.
+            mode: compiled dispatch mode — ``"async"`` (overlapped:
+                eager dispatch, prefetched transfers; the default) or
+                ``"sync"`` (serialized: blocked per segment, lazy
+                transfers). ``None`` resolves the
+                ``REPRO_RUNTIME_SYNC=1`` escape hatch. Both modes run
+                the same compiled segments and are bit-identical;
+                ``report.runtime["mode"]`` records which one produced
+                the timings.
 
         A compiled execution caches its jitted segments on the plan
         (recompiles only when the devices change) and records its
@@ -606,7 +615,7 @@ class PartitionPlan:
         if runtime == "interpret":
             return _execute(self.traced.program, self.assignment,
                             devs, *args, **kwargs)
-        from .core.runtime import CompiledRuntime
+        from .core.runtime import CompiledRuntime, resolve_runtime_mode
         key = (tuple(devs[:self.k]), donate)
         rt = getattr(self, "_compiled_runtime", None)
         if rt is None or rt[0] != key:
@@ -616,6 +625,9 @@ class PartitionPlan:
                                        device_model=self.traced
                                        .device_model))
             self._compiled_runtime = rt
+        # mode is resolved per call (not cached in the key): the same
+        # compiled segments serve both dispatch modes
+        rt[1].mode = resolve_runtime_mode(mode)
         out = rt[1](*args, **kwargs)
         self.report.runtime = rt[1].stats.to_dict()
         return out
@@ -638,8 +650,18 @@ class PartitionPlan:
         the cost model is wrong for this hardware. Calibrate
         (``repro.calibrate`` → :meth:`TracedModel.annotate`),
         re-partition, and re-score to close the loop.
+
+        Sync and async samples are never mixed: per-stage timings come
+        from the serialized profiling mode (attributable, blocked),
+        while the overlap scoring runs one *async* timeline pass
+        (:meth:`CompiledRuntime.measure_timeline`) and compares its
+        measured makespan against the overlap emulator's segment-level
+        prediction. ``timing_modes`` labels which mode produced each
+        number.
         """
-        from .core.emulator import emulate
+        from .core.emulator import (emulate, emulate_overlap,
+                                    segment_cost_graph,
+                                    serialized_makespan)
         from .profiling.opbench import profile_segments
 
         if self.traced is None or self.traced.program is None:
@@ -679,6 +701,25 @@ class PartitionPlan:
         dev_ape = np.abs(pred_dev - meas_dev) / np.maximum(meas_dev, 1e-12)
         sched = emulate(g, self.assignment, self.k)
         wall = float(np.median(prof["wall_seconds"]))
+        # one async timeline pass: measured per-segment dispatch/ready/
+        # done envelope + async wall — scored against the overlap
+        # emulator's segment-level makespan prediction
+        prev_mode = rt.mode
+        try:
+            rt.mode = "async"
+            _, timeline = rt.measure_timeline(*args, **kwargs)
+        finally:
+            rt.mode = prev_mode
+        dm = self.traced.device_model
+        overlap_pred = serial_pred = None
+        if dm is not None:
+            sg, seg_assign = segment_cost_graph(
+                self.traced.program, rt.schedule, g, dm)
+            ov = emulate_overlap(sg, seg_assign, self.k,
+                                 comm_streams=dm.comm_streams)
+            overlap_pred = float(ov.makespan)
+            serial_pred = float(serialized_makespan(sg, seg_assign))
+        async_wall = float(timeline["makespan_s"])
         result = {
             "num_stages": len(segments),
             "stages_scored": int(np.count_nonzero(scored)),
@@ -699,6 +740,21 @@ class PartitionPlan:
             "measured_wall_s": wall,
             "makespan_ratio": (wall / float(sched.makespan)
                                if sched.makespan > 0 else None),
+            # overlap scoring — async samples only, never mixed with
+            # the sync per-stage numbers above (see timing_modes)
+            "timing_modes": {"per_stage": "sync",
+                             "measured_wall_s": "sync",
+                             "timeline": str(timeline["mode"]),
+                             "measured_async_wall_s": "async"},
+            "predicted_overlap_makespan_s": overlap_pred,
+            "predicted_serialized_makespan_s": serial_pred,
+            "measured_async_wall_s": async_wall,
+            "overlap_makespan_ratio": (
+                async_wall / overlap_pred
+                if overlap_pred else None),
+            "serialized_makespan_ratio": (
+                wall / serial_pred if serial_pred else None),
+            "timeline": timeline,
             "cost_model": (self.traced.device_model.name
                            if self.traced.device_model else None),
         }
@@ -738,12 +794,31 @@ class PartitionPlan:
         m = measure_call(
             lambda: self.execute(*args, devices=devices,
                                  device_map=device_map,
-                                 runtime="compiled", **kwargs),
+                                 runtime="compiled", mode="async",
+                                 **kwargs),
             spec=MeasureSpec(warmup=0, reps=max(int(reps), 2)),
             sync=jax.block_until_ready)
         out_c = m.result
         best = m.seconds
         rt = dict(self.report.runtime)
+        # the serialized escape hatch, same compiled segments: the
+        # async-vs-sync delta is the measured overlap speedup
+        m_sync = measure_call(
+            lambda: self.execute(*args, devices=devices,
+                                 device_map=device_map,
+                                 runtime="compiled", mode="sync",
+                                 **kwargs),
+            spec=MeasureSpec(warmup=0, reps=max(int(reps), 2)),
+            sync=jax.block_until_ready)
+        sync_s = m_sync.seconds
+        sync_drift = 0.0
+        for a, b in zip(jax.tree_util.tree_leaves(m_sync.result),
+                        jax.tree_util.tree_leaves(out_c)):
+            a = np.asarray(a, dtype=np.float64)
+            b = np.asarray(b, dtype=np.float64)
+            if a.size:
+                sync_drift = max(sync_drift,
+                                 float(np.max(np.abs(a - b))))
         drift = 0.0
         for a, b in zip(jax.tree_util.tree_leaves(out_c),
                         jax.tree_util.tree_leaves(out_i)):
@@ -762,6 +837,13 @@ class PartitionPlan:
             "timing_attempts": int(m.attempts),
             "timing_noisy": bool(m.noisy),
             "speedup": interp_s / best if best > 0 else float("inf"),
+            "compiled_mode": rt.get("mode", "async"),
+            "compiled_sync_s": sync_s,
+            "compiled_sync_dispersion": m_sync.dispersion,
+            "overlap_speedup": sync_s / best if best > 0 else float("inf"),
+            "sync_async_drift": sync_drift,
+            "prefetched_transfers": rt.get("prefetched_transfers", 0),
+            "deferred_transfers": rt.get("deferred_transfers", 0),
             "compile_s": rt.get("compile_seconds", 0.0),
             "num_segments": rt.get("num_segments", 0),
             "segments_per_device": rt.get("segments_per_device", []),

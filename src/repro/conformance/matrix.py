@@ -17,6 +17,11 @@ and checks, per arch:
     op-by-op interpreter, and both within tolerance of the un-partitioned
     ``jax.jit`` reference (XLA fuses across the whole step there, so the
     reference tolerance is looser than the compiled-vs-interpreter one);
+  * **dispatch-mode equality** — the overlapped (async, prefetching)
+    dispatch path and the serialized (sync) escape hatch produce
+    *bit-identical* outputs: same executables, same values, same order,
+    only timing differs; the async call's overlap stats (prefetched/
+    deferred transfers, peak in-flight bytes) land in the record;
   * **placement sanity** — every node placed exactly once on a device in
     ``[0, K)``, the plan feasible, and the Step-2 predicted peaks within
     the memory limit the partitioner was given;
@@ -304,6 +309,12 @@ def run_conformance(spec: ArchSpec, save_dir: str | None = None) -> dict:
     rec["transfers"] = rt.get("transfers", 0)
     rec["cut_edge_bytes"] = rt.get("transfer_bytes", 0.0)
     rec["measured_peak_bytes"] = rt.get("peak_live_bytes", [])
+    # overlap stats of the default (async) dispatch path
+    rec["dispatch_mode"] = rt.get("mode", "")
+    rec["prefetched_transfers"] = rt.get("prefetched_transfers", 0)
+    rec["deferred_transfers"] = rt.get("deferred_transfers", 0)
+    rec["peak_inflight_transfer_bytes"] = rt.get(
+        "peak_inflight_transfer_bytes", 0.0)
 
     # steady state: compiled segments are cached on the plan
     t0 = time.perf_counter()
@@ -317,6 +328,21 @@ def run_conformance(spec: ArchSpec, save_dir: str | None = None) -> dict:
         violations.append(
             f"compiled runtime not deterministic across calls "
             f"(max abs diff {det:.3e})")
+
+    # --- dispatch-mode equality: serialized == overlapped, exactly ---------
+    # both modes run the same compiled executables on the same values in
+    # the same order, so their outputs must be bit-identical — any drift
+    # means dispatch order leaked into the numerics
+    t0 = time.perf_counter()
+    out_s = plan.execute(params, batch, runtime="compiled", mode="sync")
+    jax.block_until_ready(out_s)
+    rec["sync_step_s"] = time.perf_counter() - t0
+    sync_drift = _tree_max_diff(out_c, out_s)
+    rec["sync_async_max_diff"] = sync_drift
+    if sync_drift != 0.0:
+        violations.append(
+            f"sync dispatch != async dispatch "
+            f"(max abs diff {sync_drift:.3e})")
 
     # --- interpreter equality ----------------------------------------------
     out_i = plan.execute(params, batch, runtime="interpret")

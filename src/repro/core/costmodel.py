@@ -41,6 +41,10 @@ class DeviceModel:
     link_latency: float = 1e-6 # seconds per message (alpha term)
     flop_efficiency: float = 0.5   # sustained fraction of peak for dense ops
     mem_fraction: float = 0.9      # paper §4: spare 10% for fragmentation etc.
+    # parallel outgoing transfer channels per device — the width of the
+    # comm FIFO the overlap emulator serializes cross-device edges on
+    # (1 = the paper's single comm queue per device)
+    comm_streams: int = 1
 
     def compute_seconds(self, flops: float, bytes_touched: float = 0.0) -> float:
         """Roofline op time: max(compute, memory) term."""
@@ -68,7 +72,8 @@ class DeviceModel:
                 "hbm_bytes": self.hbm_bytes,
                 "link_latency": self.link_latency,
                 "flop_efficiency": self.flop_efficiency,
-                "mem_fraction": self.mem_fraction}
+                "mem_fraction": self.mem_fraction,
+                "comm_streams": self.comm_streams}
 
 
 @dataclass(frozen=True)

@@ -27,10 +27,25 @@ Two interchangeable engines implement the same semantics:
 Both engines produce bit-for-bit identical schedules whenever event times
 don't tie exactly (guaranteed for graphs with positive costs); the
 equivalence is enforced by tests/test_engine_equivalence.py.
+
+A third engine, :func:`emulate_overlap`, refines the model for the
+*async* runtime: each device additionally owns an outgoing **comm
+queue** (a FIFO channel, ``DeviceModel.comm_streams`` wide) that
+cross-device edges occupy serially in entry order — compute and
+transfers overlap, but transfers out of one device contend with each
+other. ``emulate`` remains the infinite-bandwidth classic model; the
+overlap engine is what `accuracy_report` scores the measured async
+timeline against.
+
+The vectorized engine reuses preallocated per-thread scratch buffers
+(the pending ready-frontier, in-degrees, and the ``_serial_scan``
+temporaries) across calls — repeated emulation (`plan.retune()`-style
+search loops) no longer reallocates its hot arrays every call.
 """
 from __future__ import annotations
 
 import os
+import threading
 from dataclasses import dataclass
 
 import heapq
@@ -63,6 +78,21 @@ class Schedule:
     pe_busy: np.ndarray       # per-pe total busy time
 
 
+@dataclass
+class OverlapSchedule(Schedule):
+    """Schedule under the overlap model, plus per-node queue occupancy.
+
+    ``ready`` is when each node's last input arrived (after any comm
+    delay *and* comm-queue contention); ``queue_wait = st - ready`` is
+    the time the node sat in its device's compute queue — the per-node
+    occupancy the async runtime's measured timeline is compared to.
+    ``comm_busy`` is each device's outgoing-channel busy seconds.
+    """
+    ready: np.ndarray = None          # type: ignore[assignment]
+    queue_wait: np.ndarray = None     # type: ignore[assignment]
+    comm_busy: np.ndarray = None      # type: ignore[assignment]
+
+
 def emulate(g: CostGraph, assignment: np.ndarray, k: int,
             comm_scale: float = 1.0, engine: str | None = None) -> Schedule:
     """Emulate the FIFO executor; dispatches on ``engine``."""
@@ -72,7 +102,55 @@ def emulate(g: CostGraph, assignment: np.ndarray, k: int,
 
 
 # --------------------------------------------------------------- vectorized
-def _serial_scan(r: np.ndarray, c: np.ndarray, free: float) -> np.ndarray:
+class _EmulatorScratch:
+    """Per-thread reusable buffers for the vectorized engine.
+
+    ``emulate_vectorized`` is the hot inner call of repeated-emulation
+    loops (retune/search); these buffers — the pending ready-frontier
+    heap, the per-node ready/in-degree arrays, and the ``_serial_scan``
+    temporaries — are preallocated once and grown geometrically, so
+    repeated calls stop paying per-call allocation. Arrays that escape
+    into the returned :class:`Schedule` (``st``/``ft``/``exec_order``)
+    are still freshly allocated — results from earlier calls must stay
+    valid.
+    """
+
+    def __init__(self) -> None:
+        self._f64: dict[str, np.ndarray] = {}
+        self._i64: dict[str, np.ndarray] = {}
+        self._bool: dict[str, np.ndarray] = {}
+
+    @staticmethod
+    def _take(pool: dict, name: str, m: int, dtype) -> np.ndarray:
+        buf = pool.get(name)
+        if buf is None or buf.size < m:
+            cap = 1 << max(int(m) - 1, 0).bit_length()
+            buf = np.empty(max(cap, 16), dtype=dtype)
+            pool[name] = buf
+        return buf[:m]
+
+    def f64(self, name: str, m: int) -> np.ndarray:
+        return self._take(self._f64, name, m, np.float64)
+
+    def i64(self, name: str, m: int) -> np.ndarray:
+        return self._take(self._i64, name, m, np.int64)
+
+    def boolean(self, name: str, m: int) -> np.ndarray:
+        return self._take(self._bool, name, m, bool)
+
+
+_TLS = threading.local()
+
+
+def _scratch() -> _EmulatorScratch:
+    scr = getattr(_TLS, "scratch", None)
+    if scr is None:
+        scr = _TLS.scratch = _EmulatorScratch()
+    return scr
+
+
+def _serial_scan(r: np.ndarray, c: np.ndarray, free: float,
+                 scr: _EmulatorScratch | None = None) -> np.ndarray:
     """Exact serial-device scan: ft_i = max(ft_{i-1}, r_i) + c_i, ft_{-1}=free.
 
     Bit-for-bit identical to the scalar engine's event loop: a closed-form
@@ -82,27 +160,40 @@ def _serial_scan(r: np.ndarray, c: np.ndarray, free: float) -> np.ndarray:
     loop uses — and the reset predictions are verified against the exact
     values (a mispredict can only happen when r_i ties ft_{i-1} within one
     ulp; we then fall back to the plain sequential loop).
+
+    The returned array lives in ``scr`` (when given) and is only valid
+    until the next ``_serial_scan`` call on the same scratch — callers
+    copy it out (``ft[ids] = ...``) before re-entering.
     """
     m = r.size
+    scr = scr or _scratch()
     if m == 1:
-        out = np.empty(1)
+        out = scr.f64("scan_ft", 1)
         out[0] = max(free, r[0]) + c[0]
         return out
     # closed-form estimate: ft_i ≈ C_i + max(free, max_{j<=i}(r_j − C_{j-1}))
-    csum = np.cumsum(c)
-    approx = csum + np.maximum(np.maximum.accumulate(r - (csum - c)), free)
-    resets = np.empty(m, dtype=bool)
+    csum = scr.f64("scan_csum", m)
+    np.cumsum(c, out=csum)
+    approx = scr.f64("scan_approx", m)
+    np.subtract(csum, c, out=approx)          # csum - c
+    np.subtract(r, approx, out=approx)        # r - (csum - c)
+    np.maximum.accumulate(approx, out=approx)
+    np.maximum(approx, free, out=approx)
+    approx += csum
+    resets = scr.boolean("scan_resets", m)
     resets[0] = True
     np.greater(r[1:], approx[:-1], out=resets[1:])
-    ft = np.empty(m)
+    ft = scr.f64("scan_ft", m)
+    v = scr.f64("scan_v", m)
     starts = np.flatnonzero(resets)
     prev = free
     for si in range(starts.size):
         lo = starts[si]
         hi = starts[si + 1] if si + 1 < starts.size else m
-        v = c[lo:hi].copy()
-        v[0] = max(prev, r[lo]) + c[lo]
-        ft[lo:hi] = np.cumsum(v)
+        vv = v[lo:hi]
+        vv[:] = c[lo:hi]
+        vv[0] = max(prev, r[lo]) + c[lo]
+        np.cumsum(vv, out=ft[lo:hi])
         prev = ft[hi - 1]
     # position 0 is exact by construction; verify the predicted resets
     if np.array_equal(r[1:] > ft[:-1], resets[1:]):
@@ -133,17 +224,26 @@ def emulate_vectorized(g: CostGraph, assignment: np.ndarray, k: int,
     comp = np.asarray(g.comp, dtype=np.float64)
     assignment = np.asarray(assignment, dtype=np.int64)
     indptr, dst, w = g.csr_out()
-    indeg = g.in_degrees().copy()
+    scr = _scratch()
+    indeg = scr.i64("indeg", n)
+    np.copyto(indeg, g.in_degrees())
 
-    ready = np.zeros(n)
+    ready = scr.f64("ready", n)
+    ready.fill(0.0)
     st = np.zeros(n)
     ft = np.zeros(n)
     pe_free = np.zeros(k)
     pe_busy = np.zeros(k)
 
-    pend = np.flatnonzero(indeg == 0).astype(np.int64)
+    # the pending ready-frontier lives in one preallocated buffer: each
+    # node enters it exactly once, so capacity n bounds occupancy
+    pend_buf = scr.i64("pend", n)
+    roots = np.flatnonzero(indeg == 0)
+    n_pend = roots.size
+    pend_buf[:n_pend] = roots
     done = 0
-    while pend.size:
+    while n_pend:
+        pend = pend_buf[:n_pend]
         pr = ready[pend]
         pdev = assignment[pend]
         # safe horizon: earliest possible finish among pending nodes
@@ -155,7 +255,9 @@ def emulate_vectorized(g: CostGraph, assignment: np.ndarray, k: int,
             i = int(np.lexsort((pend, pr))[0])
             safe[i] = True
         batch = pend[safe]
-        pend = pend[~safe]
+        keep = pend[~safe]
+        n_pend = keep.size
+        pend_buf[:n_pend] = keep
 
         # per-device serial schedule in (ready, id) order
         order = np.lexsort((batch, ready[batch], assignment[batch]))
@@ -173,12 +275,12 @@ def emulate_vectorized(g: CostGraph, assignment: np.ndarray, k: int,
             d = int(bdev[lo])
             c = bcomp[lo:hi]
             r = bready[lo:hi]
-            ftb = _serial_scan(r, c, pe_free[d])
+            ftb = _serial_scan(r, c, pe_free[d], scr)
             ids = batch[lo:hi]
             ft[ids] = ftb
             # st_i = max(ready_i, ft_{i-1}) — exact, matching the scalar
             # engine's arithmetic (ftb - c would differ in the last ulp)
-            stb = np.empty(hi - lo)
+            stb = scr.f64("stb", hi - lo)
             stb[0] = max(pe_free[d], r[0])
             np.maximum(r[1:], ftb[:-1], out=stb[1:])
             st[ids] = stb
@@ -197,7 +299,8 @@ def emulate_vectorized(g: CostGraph, assignment: np.ndarray, k: int,
             uch = np.unique(ch)
             newly = uch[indeg[uch] == 0]
             if newly.size:
-                pend = np.concatenate([pend, newly])
+                pend_buf[n_pend:n_pend + newly.size] = newly
+                n_pend += newly.size
     assert done == n, "emulator stalled: graph has a cycle or bad in-degrees"
 
     makespan = float(np.max(ft)) if n else 0.0
@@ -270,3 +373,187 @@ def emulate_scalar(g: CostGraph, assignment: np.ndarray, k: int,
     order = np.lexsort((np.arange(n), st))
     return Schedule(st=st, ft=ft, makespan=makespan, exec_order=order,
                     pe_busy=pe_busy)
+
+
+# ------------------------------------------------------------------ overlap
+def emulate_overlap(g: CostGraph, assignment: np.ndarray, k: int,
+                    comm_scale: float = 1.0,
+                    comm_streams: int = 1) -> OverlapSchedule:
+    """FIFO executor with per-device outgoing comm queues (async model).
+
+    Refines :func:`emulate` for the overlapped runtime: a cross-device
+    edge does not merely delay its consumer by ``comm(e)`` — it occupies
+    the producer device's outgoing comm channel for ``comm(e)`` seconds,
+    serialized in entry order (entry = producer finish time) across
+    ``comm_streams`` parallel channels (1 = the paper's single comm FIFO
+    per device). Compute and communication overlap freely; transfers out
+    of one device contend with each other.
+
+    Event loop invariant (same as the scalar engine): the globally
+    earliest-starting action — a compute-queue head or a comm-queue
+    head — is committed each step, so committed start times are
+    nondecreasing and no later-arriving comm request can precede an
+    already-started one in its FIFO.
+
+    Provable bounds (pinned by the property tests):
+
+    * ``makespan <= serialized_makespan(...)`` — some resource is busy
+      at every instant before the makespan;
+    * ``makespan >= max(pe_busy)`` — each device serializes its compute;
+    * with ``comm_scale == 0`` the result equals ``emulate(...)``.
+    """
+    n = g.n
+    streams = max(int(comm_streams), 1)
+    if n == 0:
+        z = np.zeros(0)
+        return OverlapSchedule(
+            st=z, ft=z.copy(), makespan=0.0,
+            exec_order=np.zeros(0, dtype=np.int64), pe_busy=np.zeros(k),
+            ready=z.copy(), queue_wait=z.copy(), comm_busy=np.zeros(k))
+    comp = np.asarray(g.comp, dtype=np.float64)
+    assignment = np.asarray(assignment, dtype=np.int64)
+    st = np.zeros(n)
+    ft = np.zeros(n)
+    ready = np.zeros(n)
+    ready_at = np.zeros(n)
+    indeg = np.zeros(n, dtype=np.int64)
+    for u in range(n):
+        for v, _ in g.out_edges[u]:
+            indeg[v] += 1
+
+    comp_q: list[list[tuple[float, int]]] = [[] for _ in range(k)]
+    # comm task: (entry time = producer ft, seq, dst node, duration)
+    comm_q: list[list[tuple[float, int, int, float]]] = \
+        [[] for _ in range(k)]
+    for u in range(n):
+        if indeg[u] == 0:
+            heapq.heappush(comp_q[assignment[u]], (0.0, u))
+
+    pe_free = np.zeros(k)
+    pe_busy = np.zeros(k)
+    comm_free = np.zeros((k, streams))
+    comm_busy = np.zeros(k)
+    seq = 0
+    pending = n
+
+    def arrive(v: int, t: float) -> None:
+        if t > ready_at[v]:
+            ready_at[v] = t
+        indeg[v] -= 1
+        if indeg[v] == 0:
+            heapq.heappush(comp_q[assignment[v]], (ready_at[v], v))
+
+    while pending or any(comm_q):
+        # next action = globally earliest start among all queue heads;
+        # deterministic tie-break: compute before comm, then device id
+        best = None        # (t, kind, d) with kind 0=compute, 1=comm
+        for d in range(k):
+            if comp_q[d]:
+                t = max(pe_free[d], comp_q[d][0][0])
+                cand = (t, 0, d)
+                if best is None or cand < best:
+                    best = cand
+            if comm_q[d]:
+                t = max(float(np.min(comm_free[d])), comm_q[d][0][0])
+                cand = (t, 1, d)
+                if best is None or cand < best:
+                    best = cand
+        assert best is not None, \
+            "overlap emulator stalled: cycle or bad in-degrees"
+        t, kind, d = best
+        if kind == 0:
+            r, u = heapq.heappop(comp_q[d])
+            ready[u] = r
+            st[u] = t
+            ft[u] = t + comp[u]
+            pe_free[d] = ft[u]
+            pe_busy[d] += comp[u]
+            pending -= 1
+            for v, c in g.out_edges[u]:
+                if assignment[v] != d and comm_scale > 0.0 and c > 0.0:
+                    heapq.heappush(
+                        comm_q[d], (ft[u], seq, v, c * comm_scale))
+                    seq += 1
+                else:
+                    arrive(v, ft[u])
+        else:
+            enq, _, v, dur = heapq.heappop(comm_q[d])
+            sidx = int(np.argmin(comm_free[d]))
+            fin = max(comm_free[d][sidx], enq) + dur
+            comm_free[d][sidx] = fin
+            comm_busy[d] += dur
+            arrive(v, fin)
+
+    makespan = float(np.max(ft)) if n else 0.0
+    order = np.lexsort((np.arange(n), st))
+    return OverlapSchedule(st=st, ft=ft, makespan=makespan,
+                           exec_order=order, pe_busy=pe_busy,
+                           ready=ready, queue_wait=st - ready,
+                           comm_busy=comm_busy)
+
+
+def serialized_makespan(g: CostGraph, assignment: np.ndarray,
+                        comm_scale: float = 1.0) -> float:
+    """Makespan if nothing overlapped: every compute and every
+    cross-device transfer executed one at a time, globally — the
+    upper bound the sync runtime realizes and the overlap engine must
+    stay under."""
+    a = np.asarray(assignment, dtype=np.int64)
+    total = float(np.sum(np.asarray(g.comp, dtype=np.float64)))
+    indptr, dst, w = g.csr_out()
+    if dst.size:
+        src = np.repeat(np.arange(g.n), np.diff(indptr))
+        cross = a[dst] != a[src]
+        total += float(np.sum(w[cross])) * comm_scale
+    return total
+
+
+def segment_cost_graph(prog, sched, g: CostGraph,
+                       device_model) -> tuple[CostGraph, np.ndarray]:
+    """Lift a :class:`~repro.core.segments.SegmentSchedule` to a
+    segment-level cost graph for the overlap engine.
+
+    One node per segment (comp = sum of member-node comp from ``g``);
+    one edge per consumed cross-segment slot, weighted by the modeled
+    transfer seconds of the slot's bytes when producer and consumer
+    sit on different devices (0 for same-device segment dataflow).
+    ``emulate_overlap`` on this graph predicts the async runtime's
+    makespan; :func:`serialized_makespan` predicts the sync runtime's.
+    """
+    mem = np.asarray(g.mem, dtype=np.float64)
+    comp = np.asarray(g.comp, dtype=np.float64)
+    sg = CostGraph()
+    for seg in sched.segments:
+        sg.add_node(comp=float(np.sum(comp[list(seg.nodes)])),
+                    name=f"seg{seg.sid}")
+    # comm seconds per (producer seg, consumer seg) pair: the runtime
+    # issues one device_put per (slot, target device), consumed by the
+    # *first* reader there (later readers hit the transfer cache), so
+    # each transfer's seconds are charged to its first-consumer edge;
+    # per-slot link latency is preserved by summing per-slot costs
+    comm_of: dict[tuple[int, int], float] = {}
+    first_reader: set[tuple[tuple[int, int], int]] = set()
+    deps: set[tuple[int, int]] = set()
+    for seg in sched.segments:
+        for slot in seg.inputs:
+            psid = sched.producer_seg.get(slot, -1)
+            if psid < 0 or psid == seg.sid:
+                continue
+            pair = (psid, seg.sid)
+            deps.add(pair)
+            if sched.segments[psid].device == seg.device:
+                continue
+            xkey = (slot, seg.device)
+            if xkey in first_reader:
+                continue            # cached copy: no second transfer
+            first_reader.add(xkey)
+            n_out = prog.n_outputs.get(slot[0], 1)
+            nb = float(mem[slot[0]]) / max(n_out, 1)
+            comm_of[pair] = comm_of.get(pair, 0.0) + \
+                device_model.transfer_seconds(nb)
+    for psid, sid in sorted(deps):
+        sg.add_edge(psid, sid, comm=comm_of.get((psid, sid), 0.0))
+    sg.finalize()
+    assignment = np.asarray([seg.device for seg in sched.segments],
+                            dtype=np.int64)
+    return sg, assignment

@@ -41,6 +41,9 @@ RP031_DEAD_NODE = "RP031"
 RP032_PLACEMENT_HOLE = "RP032"
 RP033_FINGERPRINT_DRIFT = "RP033"
 RP034_REFCOUNT_TABLE_DRIFT = "RP034"
+RP040_TRANSFER_WINDOW_EXCEEDED = "RP040"
+RP041_DISPATCH_DEADLOCK = "RP041"
+RP042_OVERLAP_DONATION_HAZARD = "RP042"
 
 # --- RP1xx: artifact/plan validation exception codes ----------------------
 RP100_PLAN_INVALID = "RP100"
@@ -88,6 +91,17 @@ CODES: dict[str, str] = {
                              "bound trace",
     RP034_REFCOUNT_TABLE_DRIFT: "schedule refcount table disagrees with "
                                 "the recomputed segment-level liveness",
+    RP040_TRANSFER_WINDOW_EXCEEDED: "async prefetch liveness bound breaks "
+                                    "the in-flight transfer window, or the "
+                                    "async-timing peak certificate exceeds "
+                                    "a device cap the plan claims to fit",
+    RP041_DISPATCH_DEADLOCK: "async dispatch-order deadlock: the prefetch "
+                             "schedule references a slot its producer has "
+                             "not dispatched, or the dispatch/transfer "
+                             "wait graph has a cycle",
+    RP042_OVERLAP_DONATION_HAZARD: "donation unsafe under overlap: a "
+                                   "prefetched transfer reads a buffer "
+                                   "after a segment donated it",
     RP100_PLAN_INVALID: "plan artifact failed validation",
     RP101_SCHEMA_UNKNOWN: "unknown plan/profile schema version",
     RP102_FINGERPRINT_MISMATCH: "graph fingerprint mismatch",

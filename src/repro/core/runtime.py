@@ -18,11 +18,41 @@ device compiled subprograms with explicit transfers.
 * Segment inputs that die at their segment (``Segment.dead_inputs``)
   are donated to XLA so the output can reuse the input buffer.
 
+Dispatch modes (``mode``, default resolved from ``REPRO_RUNTIME_SYNC``):
+
+* ``"async"`` — the overlapped path. The Python loop *dispatches*
+  segments in schedule order without ever blocking; XLA's per-device
+  streams execute them concurrently. Cross-device copies are
+  **prefetched**: the ``device_put`` for every ``(slot, target pe)``
+  a later segment will need is issued the moment the producing segment
+  has been dispatched (``SegmentSchedule.prefetch``), so the transfer
+  overlaps with compute instead of stalling the consumer. Live
+  prefetched bytes are capped by a bounded in-flight **transfer
+  window** (``transfer_window_bytes``): a prefetch that would push the
+  live transferred-copy total over the window is *deferred* to lazy
+  consumer-time issue — never blocked on.
+* ``"sync"`` — the serialized escape hatch (``REPRO_RUNTIME_SYNC=1``):
+  no prefetch, every transfer issued lazily at its consumer, and a
+  ``block_until_ready`` after every segment. This is what per-segment
+  profiling (``profile_segments``) needs for attributable timings, and
+  the baseline the overlap speedup is measured against.
+
+``RuntimeStats.mode`` records which mode produced each call's timings,
+so accuracy reports never mix sync and async samples. The measured
+per-segment timeline (dispatch/ready/done timestamps, transfer-wait
+seconds) is captured by :meth:`CompiledRuntime.measure_timeline`.
+
+Out-of-order completion never breaks liveness: dropping the Python
+reference after the last *dispatched* consumer is safe because XLA
+holds its own reference to every buffer a pending execution reads, and
+donation order follows dispatch order on each device stream.
+
 The runtime is pinned bit-equal to the interpreter and the
-un-partitioned program by ``tests/test_runtime.py``.
+un-partitioned program by ``tests/test_runtime.py`` (both modes).
 """
 from __future__ import annotations
 
+import os
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -37,6 +67,34 @@ from .errors import PlanValidationError
 from .executor import TracedProgram, validate_device_count
 from .segments import Segment, SegmentSchedule, Slot, cut_segments
 
+#: Default cap on live prefetched-transfer bytes (the in-flight window).
+#: A prefetch that would push the live transferred-copy total past this
+#: is deferred to lazy consumer-time issue. Override per runtime via the
+#: ``transfer_window_bytes`` argument or ``REPRO_TRANSFER_WINDOW_MB``.
+DEFAULT_TRANSFER_WINDOW_BYTES: float = 64 * 1024 * 1024
+
+
+def resolve_runtime_mode(mode: str | None = None) -> str:
+    """Dispatch-mode resolution shared by the runtime and the facade:
+    explicit argument first, then the ``REPRO_RUNTIME_SYNC=1`` escape
+    hatch, else the overlapped default."""
+    if mode is None:
+        mode = "sync" if os.environ.get("REPRO_RUNTIME_SYNC") == "1" \
+            else "async"
+    if mode not in ("async", "sync"):
+        raise ValueError(f"runtime mode must be 'async' or 'sync', "
+                         f"got {mode!r}")
+    return mode
+
+
+def _resolve_window(window: float | None) -> float:
+    if window is not None:
+        return float(window)
+    env = os.environ.get("REPRO_TRANSFER_WINDOW_MB")
+    if env is not None:
+        return float(env) * 1024 * 1024
+    return DEFAULT_TRANSFER_WINDOW_BYTES
+
 
 @dataclass
 class RuntimeStats:
@@ -47,17 +105,29 @@ class RuntimeStats:
     compile_seconds: float = 0.0       # cumulative across calls
     calls: int = 0
     # per-call counters (the last call's values):
+    mode: str = ""                     # dispatch mode that produced them
     transfers: int = 0                 # executed device_put copies
+    prefetched_transfers: int = 0      # issued at producer dispatch
+    deferred_transfers: int = 0        # prefetches pushed past the window
     transfer_bytes: float = 0.0
     transfer_seconds_modeled: float = 0.0
+    transfer_window_bytes: float = 0.0
+    peak_inflight_transfer_bytes: float = 0.0   # live transferred copies
     execute_seconds: float = 0.0       # compile excluded
     freed_buffers: int = 0
     peak_live_bytes: list = field(default_factory=list)   # per device
     resident_bytes: list = field(default_factory=list)    # inputs+consts
     # per-segment wall seconds of the last call — populated only when the
-    # runtime's profile_segments mode is on (blocks after every segment,
-    # trading pipelining for attributable timings; repro.profiling)
+    # runtime's profile_segments mode is on (forces sync dispatch: blocks
+    # after every segment, trading pipelining for attributable timings)
     segment_seconds: list = field(default_factory=list)
+    # measured timeline of the last call, seconds from call start:
+    # dispatch is recorded on every call; ready/done/transfer_wait only
+    # by measure_timeline() (they require retaining segment outputs)
+    dispatch_seconds: list = field(default_factory=list)
+    ready_seconds: list = field(default_factory=list)
+    done_seconds: list = field(default_factory=list)
+    transfer_wait_seconds: list = field(default_factory=list)
 
     def to_dict(self) -> dict:
         return {
@@ -65,9 +135,15 @@ class RuntimeStats:
             "segments_per_device": [int(x) for x in
                                     self.segments_per_device],
             "num_transfer_edges": int(self.num_transfer_edges),
+            "mode": str(self.mode),
             "transfers": int(self.transfers),
+            "prefetched_transfers": int(self.prefetched_transfers),
+            "deferred_transfers": int(self.deferred_transfers),
             "transfer_bytes": float(self.transfer_bytes),
             "transfer_seconds_modeled": float(self.transfer_seconds_modeled),
+            "transfer_window_bytes": float(self.transfer_window_bytes),
+            "peak_inflight_transfer_bytes":
+                float(self.peak_inflight_transfer_bytes),
             "compile_seconds": float(self.compile_seconds),
             "execute_seconds": float(self.execute_seconds),
             "calls": int(self.calls),
@@ -75,6 +151,24 @@ class RuntimeStats:
             "peak_live_bytes": [float(x) for x in self.peak_live_bytes],
             "resident_bytes": [float(x) for x in self.resident_bytes],
             "segment_seconds": [float(x) for x in self.segment_seconds],
+            "dispatch_seconds": [float(x) for x in self.dispatch_seconds],
+            "ready_seconds": [float(x) for x in self.ready_seconds],
+            "done_seconds": [float(x) for x in self.done_seconds],
+            "transfer_wait_seconds": [float(x) for x in
+                                      self.transfer_wait_seconds],
+        }
+
+    def timeline(self) -> dict:
+        """The last measured per-segment timeline as one dict (empty
+        lists unless the call came from ``measure_timeline``)."""
+        return {
+            "mode": str(self.mode),
+            "dispatch_s": [float(x) for x in self.dispatch_seconds],
+            "ready_s": [float(x) for x in self.ready_seconds],
+            "done_s": [float(x) for x in self.done_seconds],
+            "transfer_wait_s": [float(x) for x in
+                                self.transfer_wait_seconds],
+            "makespan_s": float(self.execute_seconds),
         }
 
 
@@ -128,14 +222,24 @@ class CompiledRuntime:
         donate: donate dead segment inputs to XLA (default True).
         device_model: optional :class:`DeviceModel` used to price
             transfers (``transfer_seconds``) into the stats.
+        mode: ``"async"`` (overlapped, default) or ``"sync"``
+            (serialized); ``None`` resolves ``REPRO_RUNTIME_SYNC``.
+            Mutable attribute — flip it between calls.
+        transfer_window_bytes: cap on live prefetched-transfer bytes
+            (``None``: ``REPRO_TRANSFER_WINDOW_MB`` env or the 64 MiB
+            default; ``0`` disables prefetching entirely).
 
     The instance is reusable: segments compile on the first call and are
-    cached; subsequent calls only pay execution.
+    cached; subsequent calls only pay execution. Both modes run the same
+    compiled executables on the same values in the same order, so their
+    outputs are bit-identical — only dispatch/transfer timing differs.
     """
 
     def __init__(self, prog: TracedProgram, assignment: np.ndarray | None,
                  devices: list | None, *, donate: bool = True,
-                 device_model: DeviceModel | None = None):
+                 device_model: DeviceModel | None = None,
+                 mode: str | None = None,
+                 transfer_window_bytes: float | None = None):
         if devices is None:
             devices = [jax.devices()[0]]
         devices = list(devices)
@@ -145,10 +249,14 @@ class CompiledRuntime:
         self.devices = devices
         self.donate = donate
         self.device_model = device_model
-        # per-segment profiling mode: block after every segment and
-        # record RuntimeStats.segment_seconds (repro.profiling.opbench
-        # flips this; off by default — blocking defeats async dispatch)
+        self.mode = resolve_runtime_mode(mode)
+        self.transfer_window_bytes = _resolve_window(transfer_window_bytes)
+        # per-segment profiling mode: forces sync dispatch (block after
+        # every segment) and records RuntimeStats.segment_seconds
+        # (repro.profiling.opbench flips this; off by default — blocking
+        # defeats async dispatch)
         self.profile_segments = False
+        self._timeline = False          # measure_timeline() sets this
         self.schedule: SegmentSchedule = cut_segments(
             prog, assignment, k=len(devices))
         self.stats = RuntimeStats(
@@ -166,6 +274,21 @@ class CompiledRuntime:
             self._donate_sets.append(frozenset(dn))
             self._jits.append(jax.jit(fn, donate_argnums=dn))
         self._compiled: dict[int, Any] = {}
+        # slots whose env value is donated by some consumer (same-device
+        # or aliased reads) and transfer-copy keys donated by their last
+        # reader: the timeline sweep must not retain those buffers —
+        # XLA deletes them when the donating segment executes
+        self._donated_env_slots: set[Slot] = set()
+        self._donated_copy_keys: set[tuple[Slot, int]] = set()
+        for seg, dset in zip(self.schedule.segments, self._donate_sets):
+            seg_dev = self.devices[seg.device]
+            tpos = set(seg.transfer_inputs)
+            for pos in dset:
+                slot = seg.inputs[pos]
+                if pos in tpos and self._dev_of(slot[0]) is not seg_dev:
+                    self._donated_copy_keys.add((slot, seg.device))
+                else:
+                    self._donated_env_slots.add(slot)
         # consts are placed once and pinned for the runtime's lifetime
         self._const_vals: dict[int, Any] = {}
         for nid, cval in prog.const_nodes:
@@ -221,21 +344,59 @@ class CompiledRuntime:
         return 0 if self.assignment is None else int(self.assignment[nid])
 
     # ------------------------------------------------------------------
+    def measure_timeline(self, *args, **kwargs):
+        """One async call that captures the measured per-segment
+        timeline: dispatch timestamps (exact), then — after everything
+        has been dispatched — a ``block_until_ready`` sweep over each
+        segment's transferred inputs and outputs in dispatch order.
+        The sweep runs while execution is still in flight, so the
+        recorded ready/done times are the *observed-completion
+        envelope*: monotone in dispatch order, exact for segments that
+        finish in order, clamped to the previous observation otherwise.
+        Transfer-wait seconds is the sweep time spent blocked on a
+        segment's incoming copies specifically.
+
+        Retains every segment's outputs until the sweep, so liveness
+        freeing is logical-only for this call — peak-memory stats from
+        a timeline call measure retention, not the freeing schedule.
+
+        Returns ``(result, timeline_dict)``; the timeline is also left
+        in ``stats`` (``dispatch/ready/done/transfer_wait_seconds``).
+        """
+        self._timeline = True
+        try:
+            result = self(*args, **kwargs)
+        finally:
+            self._timeline = False
+        return result, self.stats.timeline()
+
+    # ------------------------------------------------------------------
     def __call__(self, *args, **kwargs):
         prog, sched = self.prog, self.schedule
         flat_args = jax.tree_util.tree_leaves((args, kwargs))
         if len(flat_args) != len(prog.input_nodes):
             raise ValueError(f"expected {len(prog.input_nodes)} leaves, "
                              f"got {len(flat_args)}")
+        # profile_segments needs a block after every segment anyway, so
+        # it forces the serialized mode for attributable timings
+        sync = self.mode == "sync" or self.profile_segments
+        window = 0.0 if sync else float(self.transfer_window_bytes)
         t_start = time.perf_counter()
         k = len(self.devices)
         live = np.zeros(k, dtype=np.float64)
         peak = np.zeros(k, dtype=np.float64)
         freed = 0
         refcount = dict(sched.node_refcount)
-        self.stats.transfers = 0
-        self.stats.transfer_bytes = 0.0
-        self.stats.transfer_seconds_modeled = 0.0
+        st = self.stats
+        st.mode = "sync" if sync else "async"
+        st.transfers = 0
+        st.prefetched_transfers = 0
+        st.deferred_transfers = 0
+        st.transfer_bytes = 0.0
+        st.transfer_seconds_modeled = 0.0
+        st.transfer_window_bytes = window
+        st.peak_inflight_transfer_bytes = 0.0
+        inflight = 0.0                  # live transferred-copy bytes
 
         def alloc(pe: int, nb: float) -> None:
             live[pe] += nb
@@ -262,14 +423,57 @@ class CompiledRuntime:
         xfer_cache: dict[tuple[Slot, int], Any] = {}
         cache_by_src: dict[int, list[tuple[Slot, int]]] = {}
 
+        def count_transfer(nb: float) -> None:
+            st.transfers += 1
+            st.transfer_bytes += nb
+            if self.device_model is not None:
+                st.transfer_seconds_modeled += \
+                    self.device_model.transfer_seconds(nb)
+
+        def issue_prefetch(psid: int) -> None:
+            """Start the cross-device copies of ``psid``'s exports the
+            moment the producer is dispatched. Never blocks: a copy
+            that would push live transferred bytes past the window is
+            deferred to lazy issue at its consumer."""
+            nonlocal inflight
+            for slot, dst_pe in sched.prefetch.get(psid, ()):
+                dev = self.devices[dst_pe]
+                if self._dev_of(slot[0]) is dev:
+                    continue            # aliased pes: no copy needed
+                key = (slot, dst_pe)
+                if key in xfer_cache:
+                    continue
+                src_v = env.get(slot)
+                if src_v is None:
+                    continue            # freed early — lazy path guards
+                nb = float(_nbytes(src_v))
+                if inflight + nb > window:
+                    st.deferred_transfers += 1
+                    continue
+                v = jax.device_put(src_v, dev)
+                count_transfer(nb)
+                st.prefetched_transfers += 1
+                alloc(dst_pe, nb)
+                inflight += nb
+                if inflight > st.peak_inflight_transfer_bytes:
+                    st.peak_inflight_transfer_bytes = inflight
+                xfer_cache[key] = v
+                cache_by_src.setdefault(slot[0], []).append(key)
+
+        if not sync:
+            issue_prefetch(-1)          # graph inputs/consts
+
         compile_s = 0.0
         seg_seconds: list[float] = []
+        dispatch_s: list[float] = []
+        retained: list[tuple[tuple, list]] = []
         for seg in sched.segments:
             dev = self.devices[seg.device]
             transfer_pos = set(seg.transfer_inputs)
             donate_set = self._donate_sets[seg.sid]
             dying_copy_bytes = 0.0      # donated copies die inside exe
             invals = []
+            xfer_vals: list[Any] = []   # this segment's incoming copies
             for pos, slot in enumerate(seg.inputs):
                 v = env[slot]
                 if pos in transfer_pos \
@@ -282,21 +486,28 @@ class CompiledRuntime:
                         v = cached
                         if pos in donate_set:      # last reader here
                             xfer_cache.pop(key)
-                            dying_copy_bytes += _nbytes(v)
+                            nb = float(_nbytes(v))
+                            dying_copy_bytes += nb
+                            inflight -= nb
                     else:
-                        nb = _nbytes(v)
+                        # lazy issue: sync mode, window-deferred, or the
+                        # copy was already donated by an earlier reader
+                        nb = float(_nbytes(v))
                         v = jax.device_put(v, dev)
-                        self.stats.transfers += 1
-                        self.stats.transfer_bytes += nb
-                        if self.device_model is not None:
-                            self.stats.transfer_seconds_modeled += \
-                                self.device_model.transfer_seconds(nb)
+                        count_transfer(nb)
                         alloc(seg.device, nb)
                         if pos in donate_set:
                             dying_copy_bytes += nb
                         else:
+                            inflight += nb
+                            if inflight > st.peak_inflight_transfer_bytes:
+                                st.peak_inflight_transfer_bytes = inflight
                             xfer_cache[key] = v
-                            cache_by_src.setdefault(slot[0], []).append(key)
+                            cache_by_src.setdefault(slot[0],
+                                                    []).append(key)
+                    if self._timeline \
+                            and key not in self._donated_copy_keys:
+                        xfer_vals.append(v)
                 invals.append(v)
             exe = self._compiled.get(seg.sid)
             if exe is None:
@@ -318,13 +529,24 @@ class CompiledRuntime:
             if self.profile_segments:
                 jax.block_until_ready(outs)
                 seg_seconds.append(time.perf_counter() - t_seg)
+            elif sync:
+                jax.block_until_ready(outs)
             if not invals:
                 # no committed inputs to infer placement from: pin the
                 # outputs to the segment's device explicitly
                 outs = tuple(jax.device_put(o, dev) for o in outs)
+            dispatch_s.append(time.perf_counter() - t_start - compile_s)
             for slot, v in zip(seg.outputs, outs):
                 env[slot] = v
                 alloc(seg.device, _nbytes(v))
+            if not sync:
+                # outputs are registered, producer is in flight: start
+                # the copies its consumers on other devices will need
+                issue_prefetch(seg.sid)
+            if self._timeline:
+                keep = tuple(v for slot, v in zip(seg.outputs, outs)
+                             if slot not in self._donated_env_slots)
+                retained.append((keep, xfer_vals))
             live[seg.device] -= dying_copy_bytes
             # liveness-driven freeing: drop values whose last consuming
             # segment has now run (plus their cached transfer copies)
@@ -337,7 +559,9 @@ class CompiledRuntime:
                 for key in cache_by_src.pop(src, ()):
                     v = xfer_cache.pop(key, None)
                     if v is not None:
-                        live[key[1]] -= _nbytes(v)
+                        nb = float(_nbytes(v))
+                        live[key[1]] -= nb
+                        inflight -= nb
                         freed += 1
                 if src not in node_vals:
                     pe = self._pe_of(src)
@@ -351,6 +575,23 @@ class CompiledRuntime:
         for slot in prog.out_slots:
             outs.append(None if slot is None else env[slot])
         result = jax.tree_util.tree_unflatten(prog.out_tree, outs)
+        ready_s: list[float] = []
+        done_s: list[float] = []
+        xfer_wait_s: list[float] = []
+        if self._timeline:
+            # observed-completion sweep: runs while execution is still
+            # in flight (dispatch above never blocked), so each block
+            # returns at ~the segment's true completion for segments
+            # finishing in dispatch order
+            for seg_outs, seg_xfers in retained:
+                t0 = time.perf_counter()
+                if seg_xfers:
+                    jax.block_until_ready(seg_xfers)
+                t1 = time.perf_counter()
+                ready_s.append(t1 - t_start - compile_s)
+                xfer_wait_s.append(t1 - t0)
+                jax.block_until_ready(seg_outs)
+                done_s.append(time.perf_counter() - t_start - compile_s)
         # sync before reading the clock: under async dispatch the wall
         # time up to here is dispatch time, not execution time
         jax.block_until_ready([o for o in outs if o is not None])
@@ -360,6 +601,10 @@ class CompiledRuntime:
         self.stats.calls += 1
         self.stats.freed_buffers = freed
         self.stats.segment_seconds = seg_seconds
+        self.stats.dispatch_seconds = dispatch_s
+        self.stats.ready_seconds = ready_s
+        self.stats.done_seconds = done_s
+        self.stats.transfer_wait_seconds = xfer_wait_s
         self.stats.peak_live_bytes = [float(x) for x in peak]
         self.stats.resident_bytes = [float(x) for x in resident]
         return result
@@ -367,10 +612,11 @@ class CompiledRuntime:
 
 def execute_compiled(prog: TracedProgram, assignment: np.ndarray | None,
                      devices: list | None, *args,
-                     device_model: DeviceModel | None = None, **kwargs):
+                     device_model: DeviceModel | None = None,
+                     mode: str | None = None, **kwargs):
     """One-shot convenience: build a :class:`CompiledRuntime` and call it.
     Returns ``(result, runtime)`` so callers can read the stats or reuse
     the compiled segments."""
     rt = CompiledRuntime(prog, assignment, devices,
-                         device_model=device_model)
+                         device_model=device_model, mode=mode)
     return rt(*args, **kwargs), rt

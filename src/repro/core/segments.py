@@ -30,6 +30,14 @@ needs statically: per-producer segment-level refcounts (how many
 segments read a node, +1 when it feeds the program output) and, per
 segment, which input slots die there (``dead_inputs`` — the jit donation
 set).
+
+For the async runtime the cut additionally emits a **prefetch table**:
+for every producing segment, the ``(slot, dst_pe)`` transfers whose
+consumers live on another device. The runtime issues those
+``device_put`` copies the moment the producer segment has been
+*dispatched* (not completed), so the copy overlaps with compute instead
+of stalling the consumer. Entries keyed ``-1`` belong to graph
+inputs/constants and are issued at call start.
 """
 from __future__ import annotations
 
@@ -71,6 +79,17 @@ class SegmentSchedule:
     # producer node -> last consuming segment id (-1: only program output)
     last_consumer_seg: dict[int, int] = field(default_factory=dict)
     num_transfer_edges: int = 0          # static cross-device slot reads
+    # producing segment id -> transfers to issue right after its dispatch
+    # (-1: transfers of graph inputs/consts, issued at call start); one
+    # entry per (slot, dst pe), ordered by first consumer
+    prefetch: dict[int, tuple[tuple[Slot, int], ...]] = \
+        field(default_factory=dict)
+    # (slot, consuming pe) -> last consuming segment on that pe — the
+    # only segment allowed to donate the cached transferred copy
+    last_reader_on_dev: dict[tuple[Slot, int], int] = \
+        field(default_factory=dict)
+    # slot -> producing segment id (-1 for graph inputs/consts)
+    producer_seg: dict[Slot, int] = field(default_factory=dict)
 
     @property
     def num_segments(self) -> int:
@@ -226,9 +245,11 @@ def cut_segments(prog: TracedProgram, assignment: np.ndarray | None,
         seg_inputs.append(in_slots)
         seg_outputs.append(out_slots)
 
-    # --- donation/transfer sets (pass 2) -----------------------------------
+    # --- donation/transfer sets + prefetch table (pass 2) ------------------
     segments: list[Segment] = []
     num_transfers = 0
+    prefetch: dict[int, list[tuple[Slot, int]]] = {}
+    prefetched: set[tuple[Slot, int]] = set()
     for sid, run in enumerate(runs):
         sdev = dev(run[0])
         dead: list[int] = []
@@ -247,6 +268,12 @@ def cut_segments(prog: TracedProgram, assignment: np.ndarray | None,
                 num_transfers += 1
                 if last_on_dev[(slot, sdev)] == sid:
                     dead.append(pos)
+                # the copy is issued once per (slot, target device) —
+                # register it for prefetch at its producer's dispatch
+                if (slot, sdev) not in prefetched:
+                    prefetched.add((slot, sdev))
+                    psid = seg_of_node.get(src, -1)
+                    prefetch.setdefault(psid, []).append((slot, sdev))
             elif (src in node_set and src not in output_nodes
                     and last_seg.get(src) == sid):
                 # same-device intermediate whose last reader is this
@@ -257,7 +284,18 @@ def cut_segments(prog: TracedProgram, assignment: np.ndarray | None,
             inputs=tuple(seg_inputs[sid]), outputs=tuple(seg_outputs[sid]),
             dead_inputs=tuple(dead), transfer_inputs=tuple(transfers)))
 
+    producer_seg: dict[Slot, int] = {}
+    for seg in segments:
+        for slot in seg.outputs:
+            producer_seg[slot] = seg.sid
+        for slot in seg.inputs:
+            producer_seg.setdefault(slot, seg_of_node.get(slot[0], -1))
+
     return SegmentSchedule(segments=segments, k=k,
                            node_refcount=node_refcount,
                            last_consumer_seg=last_seg,
-                           num_transfer_edges=num_transfers)
+                           num_transfer_edges=num_transfers,
+                           prefetch={s: tuple(v)
+                                     for s, v in prefetch.items()},
+                           last_reader_on_dev=dict(last_on_dev),
+                           producer_seg=producer_seg)

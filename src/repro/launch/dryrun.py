@@ -439,6 +439,16 @@ def main() -> int:
                           f"{rt['interpreter_s'] * 1e3:.0f} ms "
                           f"({rt['speedup']:.0f}x); measured/predicted "
                           f"peaks {mvp}", flush=True)
+                    if "overlap_speedup" in rt:
+                        print(f"     overlap: async "
+                              f"{rt['compiled_s'] * 1e3:.1f} ms vs sync "
+                              f"{rt['compiled_sync_s'] * 1e3:.1f} ms "
+                              f"({rt['overlap_speedup']:.2f}x), "
+                              f"{rt['prefetched_transfers']}/"
+                              f"{rt['transfers']} transfers prefetched "
+                              f"({rt['deferred_transfers']} deferred), "
+                              f"sync/async drift "
+                              f"{rt['sync_async_drift']:.3g}", flush=True)
                     if rt["output_drift"] > 1e-5:
                         print(f"     WARNING: output drift "
                               f"{rt['output_drift']:.3g}", flush=True)

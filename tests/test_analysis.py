@@ -62,7 +62,7 @@ def test_clean_plan_verifies_clean(plan2):
     rep = plan2.verify()
     assert not rep.has_errors(), rep.render()
     for name in ("placement", "structure", "deadlock", "liveness",
-                 "memory", "lint"):
+                 "memory", "overlap", "lint"):
         assert name in rep.passes_run, rep.passes_run
     # the report is cached per (trace, assignment, k)
     assert plan2.verify() is rep
@@ -117,7 +117,7 @@ def test_mutation_caught_with_expected_code(name, traced, plan2):
     applied = False
     for seed in range(40):
         rng = np.random.default_rng(seed)
-        if name == "cap_overflow":
+        if name in ("cap_overflow", "async_cap_overflow"):
             # needs byte annotations: use the real trace's cost graph
             case = make_case(t.program, plan2.assignment, plan2.k,
                              graph=t.graph)

@@ -190,6 +190,30 @@ def test_mapping_csr_helpers_match_scalar(seed):
     assert m_vec.secondary_pe == m_ref.secondary_pe
 
 
+def test_repeated_calls_reuse_scratch_without_aliasing():
+    """The vectorized engine's thread-local scratch buffers are reused
+    across calls; arrays escaping into earlier Schedules must stay valid
+    (freshly allocated), not be silently overwritten by a later call."""
+    g1 = random_dag(120, avg_deg=2.0, seed=11)
+    g2 = random_dag(300, avg_deg=2.5, seed=12)   # forces scratch growth
+    a1 = (np.arange(g1.n) % 3).astype(np.int64)
+    a2 = (np.arange(g2.n) % 4).astype(np.int64)
+    s1 = emulate_vectorized(g1, a1, 3)
+    st1, ft1 = s1.st.copy(), s1.ft.copy()
+    order1 = s1.exec_order.copy()
+    for _ in range(3):
+        emulate_vectorized(g2, a2, 4)
+        emulate_vectorized(g1, a1, 3)
+    assert np.array_equal(s1.st, st1)
+    assert np.array_equal(s1.ft, ft1)
+    assert np.array_equal(s1.exec_order, order1)
+    # and the reused path still matches the scalar engine exactly
+    s1b = emulate_vectorized(g1, a1, 3)
+    ref = emulate_scalar(g1, a1, 3)
+    assert np.array_equal(s1b.st, ref.st)
+    assert np.array_equal(s1b.ft, ref.ft)
+
+
 def test_vectorized_zero_cost_ties_terminate():
     """Zero-comp chains exercise the degenerate single-step fallback."""
     g = CostGraph()

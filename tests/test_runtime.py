@@ -22,7 +22,8 @@ from repro.conformance import run_py
 from repro.core import pardnn_partition
 from repro.core.errors import PlanValidationError
 from repro.core.executor import compute_liveness, execute
-from repro.core.runtime import CompiledRuntime
+from repro.core.runtime import (DEFAULT_TRANSFER_WINDOW_BYTES,
+                                CompiledRuntime, resolve_runtime_mode)
 from repro.core.segments import cut_segments, device_topo_order
 from repro.core.tracing import trace_cost_graph
 
@@ -304,6 +305,64 @@ def test_compiled_grad_of_scan_matches_interpreter_and_reference():
         np.testing.assert_allclose(c, np.asarray(r), rtol=1e-5, atol=1e-7)
 
 
+# --------------------------------------------------------- dispatch modes
+def test_runtime_mode_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_RUNTIME_SYNC", raising=False)
+    assert resolve_runtime_mode(None) == "async"
+    monkeypatch.setenv("REPRO_RUNTIME_SYNC", "1")
+    assert resolve_runtime_mode(None) == "sync"
+    # an explicit argument always wins over the env escape hatch
+    assert resolve_runtime_mode("async") == "async"
+    monkeypatch.setenv("REPRO_RUNTIME_SYNC", "0")
+    assert resolve_runtime_mode(None) == "async"
+    with pytest.raises(ValueError, match="async"):
+        resolve_runtime_mode("eager")
+
+
+def test_transfer_window_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_TRANSFER_WINDOW_MB", raising=False)
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    assert CompiledRuntime(prog, None, None).transfer_window_bytes \
+        == DEFAULT_TRANSFER_WINDOW_BYTES
+    monkeypatch.setenv("REPRO_TRANSFER_WINDOW_MB", "2")
+    assert CompiledRuntime(prog, None, None).transfer_window_bytes \
+        == 2 * 1024 * 1024
+    # explicit ctor arg beats the env; 0 disables prefetching entirely
+    rt = CompiledRuntime(prog, None, None, transfer_window_bytes=0.0)
+    assert rt.transfer_window_bytes == 0.0
+
+
+def test_sync_async_bit_equal_aliased_devices():
+    """Both modes run the same compiled executables on the same values
+    in the same order — outputs must be exactly equal, and the stats
+    record which mode produced each call's numbers."""
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 3)
+    devs = [jax.devices()[0]] * 3
+    rt = CompiledRuntime(prog, p.assignment, devs, mode="async")
+    out_a = np.asarray(rt(params, x))
+    assert rt.stats.mode == "async"
+    rt.mode = "sync"                     # mutable between calls
+    out_s = np.asarray(rt(params, x))
+    assert rt.stats.mode == "sync"
+    np.testing.assert_array_equal(out_a, out_s)
+
+
+def test_env_sync_escape_hatch_recorded(monkeypatch):
+    monkeypatch.setenv("REPRO_RUNTIME_SYNC", "1")
+    params, x = _example()
+    g, prog = trace_cost_graph(_mlp, params, x, record=True)
+    p = pardnn_partition(g, 2)
+    rt = CompiledRuntime(prog, p.assignment, [jax.devices()[0]] * 2)
+    assert rt.mode == "sync"
+    assert_matches(rt(params, x), _mlp(params, x))
+    assert rt.stats.mode == "sync"
+    assert rt.stats.prefetched_transfers == 0
+    assert rt.stats.transfer_window_bytes == 0.0
+
+
 # --------------------------------------------------------- multi-device
 def test_compiled_bit_equal_on_four_host_devices():
     run_py("""
@@ -382,4 +441,121 @@ def test_facade_runtime_switch_on_four_host_devices():
         assert r['num_segments'] >= 1 and r['calls'] == 1
         assert len(r['peak_live_bytes']) == 4
         print('OK segments', r['num_segments'], 'transfers', r['transfers'])
+    """)
+
+
+def test_async_sync_interp_equal_on_four_host_devices():
+    """The overlap acceptance triangle on a real 4-device mesh:
+    async == sync exactly (same executables, same values), both within
+    ulp of the interpreter; prefetch counters move only under async;
+    a one-byte window defers every prefetch yet changes nothing."""
+    run_py("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import pardnn_partition
+        from repro.core.executor import execute
+        from repro.core.runtime import CompiledRuntime
+        from repro.core.tracing import trace_cost_graph
+        assert len(jax.devices()) == 4
+
+        def mlp(params, x):
+            def layer(h, p):
+                w1, w2 = p
+                h = jnp.tanh(h @ w1) @ w2
+                return h, jnp.sum(h)
+            h, sums = jax.lax.scan(layer, x, params)
+            return jnp.mean(h ** 2) + jnp.sum(sums)
+
+        key = jax.random.PRNGKey(0)
+        L, D, H = 6, 16, 32
+        params = (jax.random.normal(key, (L, D, H)) * 0.1,
+                  jax.random.normal(key, (L, H, D)) * 0.1)
+        x = jax.random.normal(key, (3, D))
+        g, prog = trace_cost_graph(mlp, params, x, record=True)
+        p = pardnn_partition(g, 4)
+        devs = jax.devices()[:4]
+        out_i = execute(prog, p.assignment, devs, params, x)
+
+        rt = CompiledRuntime(prog, p.assignment, devs, mode='async')
+        out_a = np.asarray(rt(params, x))
+        assert rt.stats.mode == 'async'
+        transfers = rt.stats.transfers
+        prefetched = rt.stats.prefetched_transfers
+        assert prefetched + rt.stats.deferred_transfers >= 0
+
+        rt.mode = 'sync'
+        out_s = np.asarray(rt(params, x))
+        assert rt.stats.mode == 'sync'
+        assert rt.stats.prefetched_transfers == 0     # sync never prefetches
+        np.testing.assert_array_equal(out_a, out_s)
+        np.testing.assert_allclose(out_a, np.asarray(out_i),
+                                   rtol=2e-6, atol=1e-8)
+        if transfers:
+            assert prefetched > 0, (prefetched, transfers)
+
+        # window too small for any copy: every prefetch deferred to the
+        # lazy consumer-time path, outputs still bit-identical
+        rt_w = CompiledRuntime(prog, p.assignment, devs, mode='async',
+                               transfer_window_bytes=1.0)
+        out_w = np.asarray(rt_w(params, x))
+        np.testing.assert_array_equal(out_w, out_a)
+        assert rt_w.stats.prefetched_transfers == 0
+        if transfers:
+            assert rt_w.stats.deferred_transfers > 0
+            assert rt_w.stats.transfers == transfers  # lazy path covers all
+        print('OK transfers', transfers, 'prefetched', prefetched)
+    """)
+
+
+def test_measured_timeline_on_four_host_devices():
+    """measure_timeline: per-segment dispatch/ready/done envelope with
+    the documented monotonicity, one entry per segment, makespan no
+    earlier than the last observed completion; plain calls record
+    dispatch stamps only (ready/done need output retention)."""
+    run_py("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import pardnn_partition
+        from repro.core.runtime import CompiledRuntime
+        from repro.core.tracing import trace_cost_graph
+        assert len(jax.devices()) == 4
+
+        def mlp(params, x):
+            def layer(h, p):
+                w1, w2 = p
+                h = jnp.tanh(h @ w1) @ w2
+                return h, jnp.sum(h)
+            h, sums = jax.lax.scan(layer, x, params)
+            return jnp.mean(h ** 2) + jnp.sum(sums)
+
+        key = jax.random.PRNGKey(0)
+        params = (jax.random.normal(key, (6, 16, 32)) * 0.1,
+                  jax.random.normal(key, (6, 32, 16)) * 0.1)
+        x = jax.random.normal(key, (3, 16))
+        g, prog = trace_cost_graph(mlp, params, x, record=True)
+        p = pardnn_partition(g, 4)
+        rt = CompiledRuntime(prog, p.assignment, jax.devices()[:4])
+        out, tl = rt.measure_timeline(params, x)
+        n = rt.stats.num_segments
+        assert tl['mode'] == 'async'
+        for key_ in ('dispatch_s', 'ready_s', 'done_s', 'transfer_wait_s'):
+            assert len(tl[key_]) == n, key_
+        d, r, dn, w = (tl['dispatch_s'], tl['ready_s'],
+                       tl['done_s'], tl['transfer_wait_s'])
+        assert all(b >= a for a, b in zip(d, d[1:]))    # dispatch order
+        assert all(b >= a for a, b in zip(dn, dn[1:]))  # observed envelope
+        assert all(x_ <= y for x_, y in zip(r, dn))     # ready before done
+        assert all(x_ <= y for x_, y in zip(d, dn))     # no time travel
+        assert all(x_ >= 0.0 for x_ in w)
+        assert tl['makespan_s'] >= dn[-1]
+        # the measured value is still the real result
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(mlp(params, x)),
+                                   rtol=2e-6, atol=1e-8)
+        # plain calls: dispatch stamps only
+        rt(params, x)
+        assert len(rt.stats.dispatch_seconds) == n
+        assert rt.stats.ready_seconds == []
+        assert rt.stats.done_seconds == []
+        print('OK segments', n)
     """)

@@ -68,6 +68,12 @@ def test_full_loop_conformance(arch):
     # equality headroom actually observed, not just under the gate
     assert rec["compiled_vs_interpreter_max_diff"] <= spec.ci_atol
     assert rec["compiled_vs_reference_max_diff"] <= spec.ref_atol
+    # overlapped and serialized dispatch are bit-identical, and the
+    # async call's overlap stats made it into the record
+    assert rec["sync_async_max_diff"] == 0.0
+    assert rec["dispatch_mode"] in ("async", "sync")
+    assert rec["prefetched_transfers"] >= 0
+    assert rec["deferred_transfers"] >= 0
 
 
 def test_spec_overrides_round_trip():
