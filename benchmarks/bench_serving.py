@@ -1,0 +1,158 @@
+"""Serving throughput under load: continuous batching vs one-at-a-time.
+
+Drives the paged continuous-batching engine
+(``repro.serving.ServingEngine``) with a seeded Poisson workload at
+several concurrency caps and records per-level TTFT / inter-token
+latency percentiles and token throughput into ``BENCH_serving.json``.
+Level 1 *is* the sequential baseline (one request in flight at a time);
+``speedup_vs_sequential`` is each level's throughput over it.
+
+Gate policy (docs/ARCHITECTURE.md):
+
+  * **hard** — ``token_equality``: every request's output matches the
+    un-partitioned sequential reference token-for-token at every
+    concurrency level (continuous batching must not change results);
+  * **hard** — ``leaked_blocks == 0`` at every drain: the allocator's
+    conservation invariant;
+  * **not gated** — every timing and throughput number (tokens/sec,
+    TTFT, speedups). On a loaded CI box the batching win at tiny model
+    sizes is noise; times are recorded for humans, never asserted.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --tiny \
+        --out BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+try:                                    # package mode (benchmarks.run)
+    from .common import emit
+except ImportError:                     # standalone script mode
+    from common import emit
+
+
+def _reference_outputs(cfg, params, workload, max_len: int) -> dict:
+    """Sequential greedy reference per request (the correctness anchor)."""
+    import jax.numpy as jnp
+    from repro.models import decode_step, prefill
+
+    refs = {}
+    for req in workload.requests:
+        toks = jnp.asarray(req.prompt[None, :])
+        logits, caches = prefill(cfg, params, {"tokens": toks},
+                                 max_len=max_len)
+        out = [int(jnp.argmax(logits[0, -1]))]
+        pos = toks.shape[1]
+        while len(out) < req.max_new_tokens:
+            if req.eos_id is not None and out[-1] == req.eos_id:
+                break
+            logits, caches = decode_step(
+                cfg, params, caches, jnp.asarray([[out[-1]]], jnp.int32),
+                pos)
+            out.append(int(jnp.argmax(logits[0, -1])))
+            pos += 1
+        refs[req.rid] = out
+    return refs
+
+
+def run_serving(tiny: bool = False, out_path: str | None = None,
+                arch: str = "granite-8b", seed: int = 0) -> dict:
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    from repro.serving import (ServingEngine, poisson_workload,
+                               run_workload, summarize)
+
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+
+    if tiny:
+        n_req, rate = 12, 1000.0
+        geo = dict(block_size=4, num_blocks=64, max_batch=8, max_len=32)
+        plens, nnews = (3, 10), (4, 8)
+    else:
+        n_req, rate = 48, 1000.0
+        geo = dict(block_size=16, num_blocks=256, max_batch=16,
+                   max_len=128)
+        plens, nnews = (4, 32), (8, 32)
+    levels = [1, 4, 8] if geo["max_batch"] >= 8 else [1, 2, 4]
+
+    def fresh_workload():
+        return poisson_workload(n_req, rate_rps=rate,
+                                vocab=cfg.vocab_size, prompt_len=plens,
+                                max_new_tokens=nnews, seed=seed)
+
+    refs = _reference_outputs(cfg, params, fresh_workload(),
+                              geo["max_len"])
+
+    res = {"arch": arch, "tiny": bool(tiny), "requests": n_req,
+           "rate_rps": rate, "geometry": geo, "levels": [],
+           "token_equality": True, "leaked_blocks": 0}
+    base_tps = None
+    for c in levels:
+        from repro.serving import ServingStats
+        eng = ServingEngine(cfg, params, **geo)
+        # warmup pass: pays the jit compiles for this level's prefill
+        # buckets and the decode step, so the timed run below measures
+        # steady-state serving, not XLA compilation
+        run_workload(eng, fresh_workload(), max_concurrency=c)
+        eng.stats = ServingStats()
+        eng.completed = {}
+        run = run_workload(eng, fresh_workload(), max_concurrency=c)
+        summ = summarize(eng, run["completed"], run["wall_s"])
+        summ["concurrency"] = c
+        equal = all(run["completed"][rid].output == refs[rid]
+                    for rid in refs)
+        summ["token_equality"] = equal
+        res["token_equality"] = res["token_equality"] and equal
+        res["leaked_blocks"] += summ["leaked_blocks"]
+        if c == 1:
+            base_tps = summ["tokens_per_s"]
+        summ["speedup_vs_sequential"] = (
+            summ["tokens_per_s"] / base_tps
+            if base_tps else None)
+        res["levels"].append(summ)
+        emit(f"serving/{arch}/c{c}",
+             (summ["inter_token_p50_s"] or 0.0) * 1e6,
+             f"{summ['tokens_per_s']:.0f} tok/s, "
+             f"ttft_p50 {(summ['ttft_p50_s'] or 0) * 1e3:.1f}ms, "
+             f"equal={equal}, preempted={summ['preempted']}")
+    hi = res["levels"][-1]
+    emit(f"serving/{arch}/speedup",
+         (hi["inter_token_p50_s"] or 0.0) * 1e6,
+         f"c{levels[-1]} vs sequential: "
+         f"{hi['speedup_vs_sequential']:.2f}x")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"wrote {out_path}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="continuous-batching serving throughput benchmark")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--out", default=None,
+                    help="write the results JSON here "
+                         "(e.g. BENCH_serving.json)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    res = run_serving(tiny=args.tiny, out_path=args.out, arch=args.arch)
+    # correctness gate (see module doc): equality and block accounting
+    # are asserted; no timing ever is
+    if not res["token_equality"]:
+        raise SystemExit("FAIL: continuous batching changed tokens")
+    if res["leaked_blocks"]:
+        raise SystemExit(f"FAIL: {res['leaked_blocks']} KV blocks leaked")
+
+
+if __name__ == "__main__":
+    main()

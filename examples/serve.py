@@ -1,6 +1,6 @@
-"""Batched serving demo: continuous batching over fixed decode slots.
+"""Batched serving demo: continuous batching over a paged KV cache.
 
-    PYTHONPATH=src python examples/serve.py --requests 6 --slots 3
+    PYTHONPATH=src python examples/serve.py --requests 6 --max-batch 3
 """
 import argparse
 import time
@@ -10,33 +10,36 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import init_params
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import Request, ServingEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-batch", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     params = init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, batch_slots=args.slots, max_len=128)
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        block_size=16, num_blocks=64, max_len=128)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for rid in range(args.requests):
         plen = int(rng.integers(3, 10))
         eng.submit(Request(
             rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            prompt=rng.integers(1, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=args.max_new))
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
+    s = eng.stats
     total_toks = sum(len(r.output) for r in done.values())
     print(f"served {len(done)} requests / {total_toks} tokens in {dt:.2f}s "
-          f"({eng.ticks} engine ticks, {args.slots} slots)")
+          f"({s.ticks} ticks, {s.prefill_calls} prefill calls, "
+          f"batch width {args.max_batch})")
     for rid in sorted(done):
         r = done[rid]
         print(f"  req {rid}: prompt[{len(r.prompt)}] -> {r.output}")

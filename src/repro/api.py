@@ -293,6 +293,10 @@ class PlanReport:
     # static-verification summary from plan.verify() (repro.analysis):
     # severity counts, per-code counts, passes run, error/warn findings
     diagnostics: dict = field(default_factory=dict)
+    # serving-engine counters from the plan's last drained serve() run
+    # (repro.serving.ServingStats.to_dict): admissions, preemptions,
+    # TTFT / inter-token latency percentiles, peak blocks in use
+    serving: dict = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {"makespan_s": self.makespan_s,
@@ -303,7 +307,8 @@ class PlanReport:
                 "counters": self.counters,
                 "runtime": self.runtime,
                 "accuracy": self.accuracy,
-                "diagnostics": self.diagnostics}
+                "diagnostics": self.diagnostics,
+                "serving": self.serving}
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanReport":
@@ -315,7 +320,8 @@ class PlanReport:
                    counters=dict(d.get("counters", {})),
                    runtime=dict(d.get("runtime", {})),
                    accuracy=dict(d.get("accuracy", {})),
-                   diagnostics=dict(d.get("diagnostics", {})))
+                   diagnostics=dict(d.get("diagnostics", {})),
+                   serving=dict(d.get("serving", {})))
 
     @classmethod
     def from_placement(cls, p: Placement) -> "PlanReport":
@@ -857,6 +863,35 @@ class PartitionPlan:
                 (m / p if p else None)
                 for m, p in zip(measured, predicted)],
         }
+
+    # -- serving ------------------------------------------------------------
+    def serve(self, cfg, params, *, devices=None, device_map=None,
+              runtime: str | None = None, **overrides):
+        """Build a :class:`~repro.serving.ServingEngine` deploying this
+        plan: the paged KV pools are allocated on the devices the plan
+        assigns their consuming attention ops to, and every decode step
+        runs through the plan's compiled segment runtime.
+
+        The serving geometry (block_size / num_blocks / max_batch /
+        max_len) defaults to what the plan was partitioned for
+        (``meta["serving"]``, recorded by
+        :func:`repro.serving.partition_for_serving`); keyword
+        ``overrides`` replace individual values — but changing geometry
+        changes the traced decode step's shapes, so overrides that
+        alter it will fail the fingerprint check at bind time, which is
+        the intended guardrail.
+        """
+        from .serving import ServingEngine
+        geo = dict(self.meta.get("serving") or {})
+        geo.update(overrides)
+        if not geo:
+            raise ValueError(
+                "plan carries no serving geometry (meta['serving']) — "
+                "build it with repro.serving.partition_for_serving, or "
+                "pass block_size/num_blocks/max_batch/max_len explicitly")
+        return ServingEngine(cfg, params, plan=self, devices=devices,
+                             device_map=device_map, runtime=runtime,
+                             **geo)
 
     # -- bridges ------------------------------------------------------------
     def to_pipeline_stages(self, layer_costs, layer_mem, act_bytes: float,

@@ -14,13 +14,14 @@ regression gate against a committed baseline.
 """
 from .matrix import (ArchSpec, MATRIX_OVERRIDES, build_matrix, matrix_archs,
                      spec_for, make_train_step, example_batch,
-                     run_conformance)
+                     run_conformance, run_serving_conformance)
 from .subproc import (SubprocessError, forced_mesh_env, run_py, run_json,
                       run_arch_subprocess)
 
 __all__ = [
     "ArchSpec", "MATRIX_OVERRIDES", "build_matrix", "matrix_archs",
     "spec_for", "make_train_step", "example_batch", "run_conformance",
+    "run_serving_conformance",
     "SubprocessError", "forced_mesh_env", "run_py", "run_json",
     "run_arch_subprocess",
 ]

@@ -1,6 +1,6 @@
 """Model substrate: layers, MoE, SSM, RWKV, assembly, IO specs."""
 from .transformer import (decode_step, encoder_logits, forward, init_cache,
-                          init_params, loss_fn, prefill)
+                          init_params, loss_fn, prefill, prefill_batched)
 from .io_spec import input_specs, params_spec, cache_spec
 
 
@@ -16,5 +16,5 @@ def smoke_batch(cfg, batch: int = 2, seq: int = 32):
 
 
 __all__ = ["decode_step", "encoder_logits", "forward", "init_cache",
-           "init_params", "loss_fn", "prefill", "input_specs",
-           "params_spec", "cache_spec", "smoke_batch"]
+           "init_params", "loss_fn", "prefill", "prefill_batched",
+           "input_specs", "params_spec", "cache_spec", "smoke_batch"]

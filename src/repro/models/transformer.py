@@ -291,6 +291,33 @@ def prefill(cfg: ModelConfig, params, batch: dict, max_len: int):
     return mask_pad_logits(cfg, logits), caches
 
 
+def prefill_batched(cfg: ModelConfig, params, tokens: jax.Array,
+                    plens: jax.Array):
+    """Prefill a *padded* batch of prompts in one pass.
+
+    ``tokens``: (B, S) int32, right-padded; ``plens``: (B,) int32 true
+    prompt lengths. Causality makes the pad positions invisible to every
+    valid position, so each row's states/caches over ``[0, plens[b])``
+    are identical to an unpadded prefill of that row alone. Returns
+    (last_logits (B, 1, V) fp32 — each row's logits at its *own* last
+    prompt position — and the dense caches of length S).
+
+    The serving engine batches all admitted prompts through one call of
+    this (then one host sync for the batch argmax), instead of the old
+    per-admission ``prefill`` + ``int(argmax)`` round-trips.
+    """
+    x = embed_inputs(cfg, params, {"tokens": tokens})
+    B, S = tokens.shape
+    caches = init_cache(cfg, B, S)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hidden, caches, _ = forward(cfg, params, x, positions=positions,
+                                caches=caches, cache_pos=0)
+    idx = (plens - 1).reshape(B, 1, 1)
+    last = jnp.take_along_axis(hidden, idx, axis=1)       # (B, 1, D)
+    logits = (last @ lm_head_weight(cfg, params)).astype(jnp.float32)
+    return mask_pad_logits(cfg, logits), caches
+
+
 def decode_step(cfg: ModelConfig, params, caches, tokens_or_embeds,
                 cache_pos):
     """One autoregressive step. tokens: (B,1) int32 (or embeds (B,1,D)).

@@ -1,0 +1,43 @@
+"""Placement-aware serving: continuous batching over a paged KV cache.
+
+The deployment-side counterpart of the partition plan: the same
+placement artifact that schedules a training step also places a serving
+engine's KV cache and decode step. See ``docs/ARCHITECTURE.md``
+("Serving") for the block-table layout, the placement-residency rule,
+and the scheduler state machine.
+
+Quickstart (local, no plan)::
+
+    from repro.serving import ServingEngine, Request
+    eng = ServingEngine(cfg, params, block_size=16, num_blocks=64,
+                        max_batch=8, max_len=128)
+    eng.submit(Request(rid=0, prompt=prompt_ids, max_new_tokens=32))
+    done = eng.run_until_drained()
+
+Plan-backed::
+
+    from repro.serving import partition_for_serving
+    plan = partition_for_serving(cfg, params, devices=4, memory=16e9,
+                                 block_size=16, num_blocks=64,
+                                 max_batch=8, max_len=128)
+    eng = plan.serve(cfg, params)
+    ...
+"""
+from .kvcache import (NULL_BLOCK, BlockAllocator, OutOfBlocks,
+                      gather_pages, init_pools, place_pools,
+                      resolve_pool_devices, scatter_token,
+                      supported_reason, write_prompt)
+from .scheduler import Admission, RequestState, Scheduler, ServingRequest
+from .engine import (Request, ServingEngine, ServingStats,
+                     partition_for_serving, serving_geometry)
+from .loadgen import Workload, poisson_workload, run_workload, summarize
+
+__all__ = [
+    "NULL_BLOCK", "BlockAllocator", "OutOfBlocks", "supported_reason",
+    "init_pools", "gather_pages", "scatter_token", "write_prompt",
+    "resolve_pool_devices", "place_pools",
+    "RequestState", "ServingRequest", "Admission", "Scheduler",
+    "Request", "ServingEngine", "ServingStats",
+    "partition_for_serving", "serving_geometry",
+    "Workload", "poisson_workload", "run_workload", "summarize",
+]

@@ -1,142 +1,388 @@
-"""Batched serving engine: prefill + decode over fixed batch slots.
+"""Placement-aware continuous-batching serving engine.
 
-A deliberately small but real engine: requests queue up, get packed into
-the next free slots of a fixed-size decode batch (padded prompts,
-per-slot progress tracking), and one jitted ``serve_step`` advances every
-active slot by a token per tick. Slots free as sequences hit EOS /
-max-tokens and are refilled from the queue (continuous batching at slot
-granularity).
+The engine composes the three serving pieces:
+
+* :mod:`repro.serving.kvcache` — paged KV storage (block pools, free
+  list, block tables, placement-aware residency);
+* :mod:`repro.serving.scheduler` — admission / growth / preemption over
+  the request state machine;
+* this module — the model loop: one *batched* prefill per tick for all
+  admitted prompts (a single host sync for the batch argmax), then one
+  slot-free decode step over the block tables for every DECODE request.
+
+Two execution paths share the same pure step functions:
+
+* **local** (``plan=None``): ``jax.jit`` on the default device;
+* **plan-backed** (``plan=``): the decode step runs through
+  ``PartitionPlan.execute`` — the compiled segment runtime places every
+  op on its plan-assigned device — and the KV pools are *allocated* on
+  the devices the plan assigns their consuming attention ops to
+  (``kvcache.place_pools``), so steady-state decode moves tokens and
+  block tables, never cache blocks. Build the plan with
+  :func:`partition_for_serving`, or call ``plan.serve(cfg, params)``
+  which reads the serving geometry back out of the plan's metadata.
+
+Correctness anchor: plan-backed, continuously-batched, paged greedy
+decode is token-for-token equal to the un-partitioned sequential
+reference for every request, under any admission order and any
+eviction/resume schedule (greedy decode is deterministic, and
+recompute-on-resume replays it exactly).
 """
 from __future__ import annotations
 
-import queue
+import time
 from dataclasses import dataclass, field
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, prefill
+from repro.models import decode_step, prefill_batched
+
+from . import kvcache
+from .kvcache import BlockAllocator
+from .scheduler import RequestState, Scheduler, ServingRequest
+
+# public alias: the request type users construct and submit
+Request = ServingRequest
+
+
+def _ceil_pow2(n: int, floor: int = 1) -> int:
+    p = max(int(floor), 1)
+    while p < n:
+        p *= 2
+    return p
 
 
 @dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                 # (prompt_len,) int32
-    max_new_tokens: int = 16
-    eos_id: int | None = None
-    output: list = field(default_factory=list)
-    done: bool = False
+class ServingStats:
+    """Engine counters + latency samples, mirrored into
+    ``PlanReport.serving`` for plan-backed engines."""
+    submitted: int = 0
+    admitted: int = 0              # prefill admissions (incl. resumes)
+    preempted: int = 0             # eviction events
+    evicted_requests: int = 0      # distinct requests evicted >= once
+    completed: int = 0
+    rejected: int = 0              # refused at submit()
+    ticks: int = 0
+    prefill_calls: int = 0
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+    generated_tokens: int = 0
+    peak_active: int = 0
+    peak_blocks_in_use: int = 0
+    leaked_blocks: int = 0
+    ttft_s: list = field(default_factory=list)
+    inter_token_s: list = field(default_factory=list)
+
+    def record_request(self, req: ServingRequest) -> None:
+        t = req.ttft_s()
+        if t is not None:
+            self.ttft_s.append(float(t))
+        self.inter_token_s.extend(float(d) for d in req.inter_token_s())
+        if req.evictions:
+            self.evicted_requests += 1
+        self.preempted += req.evictions
+
+    def to_dict(self) -> dict:
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else None
+        return {
+            "submitted": self.submitted, "admitted": self.admitted,
+            "preempted": self.preempted,
+            "evicted_requests": self.evicted_requests,
+            "completed": self.completed, "rejected": self.rejected,
+            "ticks": self.ticks, "prefill_calls": self.prefill_calls,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_steps": self.decode_steps,
+            "generated_tokens": self.generated_tokens,
+            "peak_active": self.peak_active,
+            "peak_blocks_in_use": self.peak_blocks_in_use,
+            "leaked_blocks": self.leaked_blocks,
+            "ttft_p50_s": pct(self.ttft_s, 50),
+            "ttft_p99_s": pct(self.ttft_s, 99),
+            "inter_token_p50_s": pct(self.inter_token_s, 50),
+            "inter_token_p99_s": pct(self.inter_token_s, 99),
+        }
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
-                 max_len: int = 256, jit: bool = True):
+    """Continuous-batching engine over a paged, placement-aware KV cache.
+
+    Args:
+        cfg, params: the model (attention-family archs; recurrent/
+            encoder-only configs raise ``NotImplementedError`` — see
+            :func:`kvcache.supported_reason`).
+        block_size: tokens per KV block.
+        num_blocks: pool size in blocks (one block is reserved as the
+            null block).
+        max_batch: decode batch width (rows of the block-table batch).
+        max_len: per-request token ceiling (prompt + generated); must be
+            a multiple of ``block_size``. Fixes the gathered dense view
+            at ``max_len`` so the decode step compiles once.
+        token_budget: max prompt tokens admitted per tick (an admission
+            batch always takes at least one request regardless).
+        plan: a :class:`~repro.api.PartitionPlan` produced by
+            :func:`partition_for_serving` with the same geometry; decode
+            then executes through the plan's compiled segment runtime
+            and pools are placed by the plan.
+        devices / device_map: forwarded to ``plan.execute`` (e.g.
+            ``device_map`` to fold PEs onto fewer real devices).
+        jit: jit the local step functions (ignored for the plan path).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, block_size: int = 16,
+                 num_blocks: int = 64, max_batch: int = 8,
+                 max_len: int = 256, token_budget: int | None = None,
+                 plan=None, devices=None, device_map=None,
+                 runtime: str | None = None, jit: bool = True):
+        if max_len % block_size:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"block_size {block_size}")
+        reason = kvcache.supported_reason(cfg)
+        if reason is not None:
+            raise NotImplementedError(
+                f"{cfg.name}: paged serving unsupported — {reason}")
         self.cfg = cfg
         self.params = params
-        self.slots = batch_slots
-        self.max_len = max_len
-        self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.active: list[Request | None] = [None] * batch_slots
-        self.pos = np.zeros(batch_slots, dtype=np.int32)
-        self.budget = np.zeros(batch_slots, dtype=np.int32)
-        self.caches = None
-        self.tokens = np.zeros((batch_slots, 1), dtype=np.int32)
-        self._decode = (jax.jit(self._decode_impl, static_argnums=())
-                        if jit else self._decode_impl)
-        self.completed: dict[int, Request] = {}
-        self.ticks = 0
+        self.block_size = int(block_size)
+        self.max_len = int(max_len)
+        self.max_blocks_per_req = self.max_len // self.block_size
+        self.max_batch = int(max_batch)
+        self.allocator = BlockAllocator(num_blocks)
+        if self.max_blocks_per_req > self.allocator.capacity:
+            raise ValueError(
+                f"max_len {max_len} needs up to {self.max_blocks_per_req} "
+                f"blocks per request but the pool only has "
+                f"{self.allocator.capacity} allocatable blocks — raise "
+                f"num_blocks or lower max_len")
+        self.scheduler = Scheduler(
+            self.allocator, block_size=self.block_size,
+            max_batch=self.max_batch,
+            token_budget=int(token_budget) if token_budget else
+            self.max_batch * self.max_len)
+        self.pools = kvcache.init_pools(cfg, num_blocks, self.block_size)
+        self.stats = ServingStats()
+        self.completed: dict[int, ServingRequest] = {}
+        self.plan = plan
+        self._devices = devices
+        self._device_map = device_map
+        self._runtime = runtime
+        self.pool_devices: list | None = None
+        self._jit = bool(jit)
+        self._prefill_cache: dict[tuple[int, int], object] = {}
+        if plan is not None:
+            self._bind_plan(plan)
+        else:
+            self._decode = (jax.jit(self._decode_impl, donate_argnums=(1,))
+                            if self._jit else self._decode_impl)
+
+    # ------------------------------------------------------------- model
+    def _decode_impl(self, params, pools, block_tables, tokens, lengths):
+        """The pure paged decode step (also the traced/partitioned fn):
+        gather pages → dense decode at per-row positions → scatter the
+        one new token per row back into its block."""
+        dense = kvcache.gather_pages(pools, block_tables)
+        logits, new_dense = decode_step(self.cfg, params, dense, tokens,
+                                        lengths)
+        new_pools = kvcache.scatter_token(pools, new_dense, block_tables,
+                                          lengths)
+        return logits, new_pools
+
+    def _decode_example_args(self):
+        """Example inputs fixing the decode step's (static) shapes."""
+        bt = jnp.zeros((self.max_batch, self.max_blocks_per_req), jnp.int32)
+        toks = jnp.zeros((self.max_batch, 1), jnp.int32)
+        lens = jnp.zeros((self.max_batch,), jnp.int32)
+        return (self.params, self.pools, bt, toks, lens)
+
+    def _bind_plan(self, plan) -> None:
+        import repro
+        traced = plan.traced
+        if traced is None or traced.program is None:
+            traced = repro.trace(self._decode_impl,
+                                 *self._decode_example_args(), record=True)
+            plan.bind(traced)
+        devs = plan._jax_devices(self._devices, self._device_map)
+        n_params = len(jax.tree_util.tree_leaves(self.params))
+        self.pools, self.pool_devices = kvcache.place_pools(
+            plan, n_params, self.pools, devs)
+
+        def _plan_decode(params, pools, bt, toks, lens):
+            return plan.execute(params, pools, bt, toks, lens,
+                                devices=self._devices,
+                                device_map=self._device_map,
+                                runtime=self._runtime)
+        self._decode = _plan_decode
+
+    def _prefill_fn(self, B: int, S: int):
+        key = (B, S)
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            def impl(params, tokens, plens):
+                return prefill_batched(self.cfg, params, tokens, plens)
+            fn = jax.jit(impl) if self._jit else impl
+            self._prefill_cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: ServingRequest) -> None:
+        """Queue a request, refusing inputs that could never complete:
+        the silent-KV-overflow class of bugs is rejected here with a
+        clear error instead of corrupting a live cache later."""
+        plen = len(req.prompt)
+        if plen < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens "
+                             f"{req.max_new_tokens} < 1")
+        if plen + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({plen} tokens) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds the "
+                f"engine's max_len ({self.max_len}) — the KV cache would "
+                f"overflow; shorten the prompt, lower max_new_tokens, or "
+                f"raise max_len")
+        req.arrival_s = time.perf_counter()
+        self.stats.submitted += 1
+        self.scheduler.submit(req)
 
     # ------------------------------------------------------------- steps
-    def _decode_impl(self, params, caches, tokens, cache_pos):
-        return decode_step(self.cfg, params, caches, tokens, cache_pos)
+    def _run_prefill(self, admits) -> None:
+        """One padded prefill for every admission: a single device call
+        and a single host sync for the whole batch (no per-admit
+        ``int(argmax)`` round-trips)."""
+        B = _ceil_pow2(len(admits))
+        S = _ceil_pow2(max(len(a.prompt) for a in admits), floor=8)
+        tokens = np.zeros((B, S), dtype=np.int32)
+        plens = np.ones((B,), dtype=np.int32)
+        for j, a in enumerate(admits):
+            tokens[j, :len(a.prompt)] = a.prompt
+            plens[j] = len(a.prompt)
+        logits, caches = self._prefill_fn(B, S)(
+            self.params, jnp.asarray(tokens), jnp.asarray(plens))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                         dtype=np.int32)                  # one host sync
+        now = time.perf_counter()
+        self.stats.prefill_calls += 1
+        self.stats.prefill_tokens += int(sum(len(a.prompt) for a in admits))
+        self.stats.admitted += len(admits)
+        for j, a in enumerate(admits):
+            req = a.req
+            self.pools = kvcache.write_prompt(
+                self.pools, req.blocks, caches, j, len(a.prompt),
+                self.block_size)
+            req.emit(int(nxt[j]), now)
+            self.stats.generated_tokens += 1
+            req.state = RequestState.DECODE
+            if req.hit_stop():
+                self._finish(req)
 
-    def submit(self, req: Request) -> None:
-        self.queue.put(req)
+    def _finish(self, req: ServingRequest) -> None:
+        self.scheduler.finish(req)
+        self.completed[req.rid] = req
+        self.stats.completed += 1
+        self.stats.record_request(req)
 
-    def _admit(self) -> None:
-        """Fill free slots: prefill each new request individually into its
-        slot's cache region (per-slot cache_pos handled by re-prefilling
-        the whole batch lazily — slot-granular for clarity, not speed)."""
-        for i in range(self.slots):
-            if self.active[i] is not None or self.queue.empty():
-                continue
-            req = self.queue.get()
-            self.active[i] = req
-            # per-slot prefill: run the prompt through, write cache rows
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache_one = prefill(
-                self.cfg, self.params, {"tokens": prompt}, self.max_len)
-            nxt = int(jnp.argmax(logits[0, -1]))
-            req.output.append(nxt)
-            if self.caches is None:
-                self.caches = jax.tree_util.tree_map_with_path(
-                    lambda p, x: jnp.concatenate(
-                        [x] * self.slots, axis=_bdim(p)), cache_one)
-            self.caches = jax.tree_util.tree_map_with_path(
-                lambda p, full, one: _slot_update(full, one, i, _bdim(p)),
-                self.caches, cache_one)
-            self.pos[i] = len(req.prompt)
-            self.budget[i] = req.max_new_tokens - 1
-            self.tokens[i, 0] = nxt
+    def _run_decode(self) -> int:
+        """One slot-free decode step over the block tables for every
+        DECODE-state request (rows beyond the active set are padding
+        aimed at the null block)."""
+        sched = self.scheduler
+        batch = []
+        for req in sorted(sched.decoding(), key=lambda r: r.admit_seq):
+            if req.state != RequestState.DECODE:
+                continue        # evicted by an earlier ensure_block
+            if sched.ensure_block(req):
+                batch.append(req)
+        # ensure_block may have evicted members picked earlier
+        batch = [r for r in batch if r.state == RequestState.DECODE]
+        if not batch:
+            return 0
+        B, W = self.max_batch, self.max_blocks_per_req
+        bt = np.zeros((B, W), dtype=np.int32)
+        toks = np.zeros((B, 1), dtype=np.int32)
+        lens = np.zeros((B,), dtype=np.int32)
+        for i, req in enumerate(batch):
+            bt[i, :len(req.blocks)] = req.blocks
+            toks[i, 0] = req.output[-1]
+            lens[i] = req.length
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(bt), jnp.asarray(toks),
+            jnp.asarray(lens))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                         dtype=np.int32)                  # one host sync
+        now = time.perf_counter()
+        self.stats.decode_steps += 1
+        for i, req in enumerate(batch):
+            req.length += 1
+            req.emit(int(nxt[i]), now)
+            self.stats.generated_tokens += 1
+            if req.hit_stop():
+                self._finish(req)
+        return len(batch)
 
     def tick(self) -> int:
-        """One engine step: admit + decode one token for all active slots.
-        Returns number of active slots advanced."""
-        self._admit()
-        live = [i for i in range(self.slots) if self.active[i] is not None]
-        if not live:
-            return 0
-        # per-slot cache positions (continuous batching: every slot decodes
-        # at its own length; layers.update_cache vmaps the cache writes)
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(self.tokens),
-            jnp.asarray(self.pos))
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), dtype=np.int32)
-        self.ticks += 1
-        for i in live:
-            req = self.active[i]
-            tok = int(nxt[i])
-            # EOS is recognized on the token this tick *consumed*: by the
-            # time the host inspects it, the decode for its successor has
-            # already run, so the in-flight token is retained before the
-            # slot frees (the EOS token itself was appended last tick —
-            # never dropped). I.e. the stop check trails the decode by
-            # one tick, the contract test_eos_stops_generation pins.
-            hit_eos = (req.eos_id is not None
-                       and int(self.tokens[i, 0]) == req.eos_id)
-            req.output.append(tok)
-            self.pos[i] += 1
-            self.budget[i] -= 1
-            if self.budget[i] <= 0 or hit_eos:
-                req.done = True
-                self.completed[req.rid] = req
-                self.active[i] = None
-            else:
-                self.tokens[i, 0] = tok
-        return len(live)
+        """One engine step: admit+prefill, then decode every active
+        request by one token. Returns the number of requests advanced."""
+        self.stats.ticks += 1
+        admits = self.scheduler.schedule_admissions()
+        if admits:
+            self._run_prefill(admits)
+        advanced = self._run_decode() + len(admits)
+        self.stats.peak_active = max(self.stats.peak_active,
+                                     len(self.scheduler.active))
+        self.stats.peak_blocks_in_use = self.allocator.peak_in_use
+        return advanced
 
-    def run_until_drained(self, max_ticks: int = 1000) -> dict[int, Request]:
-        while (not self.queue.empty()
-               or any(a is not None for a in self.active)):
-            if self.tick() == 0 and self.queue.empty():
-                break
-            if self.ticks >= max_ticks:
-                break
+    def run_until_drained(self, max_ticks: int = 100000
+                          ) -> dict[int, ServingRequest]:
+        while not self.scheduler.drained:
+            if self.tick() == 0:
+                raise RuntimeError(
+                    "serving engine stalled: queued requests cannot be "
+                    "admitted (prompt larger than the pool?)")
+            if self.stats.ticks >= max_ticks:
+                raise RuntimeError(f"exceeded max_ticks={max_ticks}")
+        self.scheduler.check_invariants()
+        self.stats.leaked_blocks = self.allocator.num_in_use
+        if self.plan is not None:
+            self.plan.report.serving = self.stats.to_dict()
         return self.completed
 
 
-def _bdim(path) -> int:
-    """Batch dim of a cache leaf: leaves under 'periods' are stacked with
-    a leading num_periods axis, so batch sits at dim 1."""
-    keys = [getattr(p, "key", None) for p in path]
-    return 1 if "periods" in keys else 0
+# ---------------------------------------------------------------------------
+# plan-backed construction
+# ---------------------------------------------------------------------------
+def serving_geometry(block_size: int = 16, num_blocks: int = 64,
+                     max_batch: int = 8, max_len: int = 256) -> dict:
+    return {"block_size": int(block_size), "num_blocks": int(num_blocks),
+            "max_batch": int(max_batch), "max_len": int(max_len)}
 
 
-def _slot_update(full, one, slot: int, bd: int):
-    idx = [0] * full.ndim
-    idx[bd] = slot
-    return jax.lax.dynamic_update_slice(full, one.astype(full.dtype),
-                                        tuple(idx))
+def partition_for_serving(cfg: ModelConfig, params, *, devices,
+                          memory=None, options=None, meta=None,
+                          **geometry):
+    """Trace the paged decode step for ``(cfg, params)`` at the given
+    serving geometry and partition it into a deployable
+    :class:`~repro.api.PartitionPlan`.
+
+    The geometry is recorded in ``plan.meta["serving"]`` so
+    ``plan.serve(cfg, params)`` can rebuild the exact engine the plan
+    was computed for (the graph fingerprint enforces the match).
+    """
+    import repro
+    geo = serving_geometry(**geometry)
+    eng = ServingEngine(cfg, params, jit=False, **geo)
+    traced = repro.trace(eng._decode_impl, *eng._decode_example_args(),
+                         record=True)
+    meta = dict(meta or {})
+    meta["serving"] = dict(geo)
+    meta.setdefault("arch", cfg.name)
+    return repro.partition(traced, devices=devices, memory=memory,
+                           options=options, meta=meta)
+
+
+__all__ = ["Request", "ServingRequest", "ServingEngine", "ServingStats",
+           "partition_for_serving", "serving_geometry"]

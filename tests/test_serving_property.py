@@ -1,0 +1,105 @@
+"""Property tests for the serving scheduler and block allocator:
+any admission order / eviction schedule preserves per-request output
+equality with the sequential reference, and any alloc/free interleaving
+preserves the allocator's conservation invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.models import decode_step, init_params, prefill  # noqa: E402
+from repro.serving import (BlockAllocator, Request,  # noqa: E402
+                           ServingEngine)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("granite-8b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reference_decode(cfg, params, prompt, n_new, max_len=64):
+    logits, caches = prefill(cfg, params,
+                             {"tokens": jnp.asarray(prompt)[None]}, max_len)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        lg, caches = decode_step(cfg, params, caches,
+                                 jnp.asarray([[toks[-1]]], jnp.int32), pos)
+        toks.append(int(jnp.argmax(lg[0, -1])))
+        pos += 1
+    return toks
+
+
+_PROPERTY_CACHE = {}
+
+
+def _property_cache(cfg, params):
+    """Fixed prompts + references shared across hypothesis examples
+    (recomputing the reference per example would dominate the test)."""
+    if "v" not in _PROPERTY_CACHE:
+        rng = np.random.default_rng(42)
+        prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+                   for n in (5, 3, 7, 4)]
+        n_new = 6
+        refs = [_reference_decode(cfg, params, p, n_new) for p in prompts]
+        _PROPERTY_CACHE["v"] = {"prompts": prompts, "refs": refs,
+                                "n_new": n_new}
+    return _PROPERTY_CACHE["v"]
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(data=st.data())
+def test_property_any_schedule_matches_reference(setup, data):
+    """For any admission order / batch width / pool size, every request
+    decodes exactly the sequential reference and all blocks drain."""
+    cfg, params = setup
+    cache = _property_cache(cfg, params)
+    n = data.draw(st.integers(2, 4), label="n_requests")
+    order = data.draw(st.permutations(list(range(n))), label="order")
+    max_batch = data.draw(st.integers(1, 4), label="max_batch")
+    # as low as 6 allocatable blocks of 4 (24 tokens) -> evictions
+    num_blocks = data.draw(st.integers(7, 16), label="num_blocks")
+    eng = ServingEngine(cfg, params, block_size=4,
+                        num_blocks=num_blocks, max_batch=max_batch,
+                        max_len=16, jit=False)
+    for i in order:
+        eng.submit(Request(rid=i, prompt=cache["prompts"][i],
+                           max_new_tokens=cache["n_new"]))
+    done = eng.run_until_drained(max_ticks=2000)
+    for i in range(n):
+        assert done[i].output == cache["refs"][i], \
+            (f"request {i} diverged under order={order}, "
+             f"max_batch={max_batch}, num_blocks={num_blocks}")
+    assert eng.allocator.num_in_use == 0
+    eng.scheduler.check_invariants()
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.tuples(st.booleans(), st.integers(1, 4)),
+                    min_size=1, max_size=40))
+def test_property_allocator_invariants(ops):
+    """Any alloc/free interleaving preserves conservation — no double
+    allocation, no loss, frees return capacity exactly."""
+    a = BlockAllocator(12)
+    held = []
+    for is_alloc, k in ops:
+        if is_alloc:
+            k = min(k, a.num_free)
+            held.extend(a.alloc_many(k))
+        elif held:
+            for _ in range(min(k, len(held))):
+                a.free(held.pop())
+        a.check()
+        assert len(set(held)) == len(held)
+        assert a.num_in_use == len(held)
+        assert a.num_free + a.num_in_use == a.capacity
+    a.free_many(held)
+    assert a.num_in_use == 0
