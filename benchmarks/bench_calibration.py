@@ -22,7 +22,6 @@ the loop's trajectory. The headline number is
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 from pathlib import Path
 
@@ -30,9 +29,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 try:                                    # package mode (benchmarks.run)
-    from .common import emit
+    from .common import emit, write_metrics
 except ImportError:                     # standalone script mode
-    from common import emit
+    from common import emit, write_metrics
 
 
 def _pct(v) -> str:
@@ -117,8 +116,8 @@ def run(tiny: bool = False, k: int = 2, arch: str = "repro-lm-100m",
         "mape_improvement": improvement,
     }
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(res, f, indent=1)
+        write_metrics(out_path, "bench_calibration", res,
+                      meta={"arch": arch, "k": k, "tiny": bool(tiny)})
         print(f"wrote {out_path}")
     return res
 

@@ -22,7 +22,6 @@ predicted per-device peak bytes. Results land in ``BENCH_runtime.json``
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 from pathlib import Path
@@ -36,9 +35,9 @@ from repro.core import pardnn_partition           # noqa: E402
 from repro.core.modelgraphs import trn, wrn       # noqa: E402
 
 try:                                    # package mode (benchmarks.run)
-    from .common import emit, timed
+    from .common import emit, timed, write_metrics
 except ImportError:                     # standalone script mode
-    from common import emit, timed
+    from common import emit, timed, write_metrics
 
 
 def run(full: bool = False, k: int = 16) -> dict:
@@ -119,8 +118,8 @@ def run_runtime(tiny: bool = False, k: int = 4,
         emit(f"runtime/{arch}/peak_dev{pe}", m,
              f"measured {m / 1e6:.1f}MB vs predicted {p / 1e6:.1f}MB")
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(res, f, indent=1)
+        write_metrics(out_path, "bench_overhead", res,
+                      meta={"arch": arch, "k": k, "tiny": bool(tiny)})
         print(f"wrote {out_path}")
     return res
 

@@ -27,7 +27,6 @@ overlap trajectory. Gate policy (docs/ARCHITECTURE.md):
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 from pathlib import Path
@@ -36,9 +35,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 try:                                    # package mode (benchmarks.run)
-    from .common import emit, timed
+    from .common import emit, timed, write_metrics
 except ImportError:                     # standalone script mode
-    from common import emit, timed
+    from common import emit, timed, write_metrics
 
 
 def run_overlap(tiny: bool = False, k: int = 4,
@@ -111,8 +110,8 @@ def run_overlap(tiny: bool = False, k: int = 4,
          f"measured/predicted {ratio:.2f}" if ratio is not None
          else "no device model: no prediction")
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(res, f, indent=1)
+        write_metrics(out_path, "bench_overlap", res,
+                      meta={"arch": arch, "k": k, "tiny": bool(tiny)})
         print(f"wrote {out_path}")
     return res
 

@@ -39,11 +39,16 @@ BYTES_FACTOR = 1.5
 BYTES_SLACK = 1 << 20
 
 
-def run_matrix(archs=None, devices: int = 4) -> dict:
+def run_matrix(archs=None, devices: int = 4,
+               trace_dir: str | None = None) -> dict:
+    import os
+
     from repro.conformance import (SubprocessError, build_matrix,
                                    run_arch_subprocess)
     matrix = build_matrix()
     archs = list(archs) if archs else sorted(matrix)
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
     records = {}
     for arch in archs:
         spec = matrix[arch]
@@ -54,9 +59,14 @@ def run_matrix(archs=None, devices: int = 4) -> dict:
                              "violations": []}
             print(f"  {arch:24s} SKIP ({spec.skip_reason})")
             continue
+        extra = ()
+        if trace_dir:
+            extra = ("--trace",
+                     os.path.join(trace_dir, f"{arch}.trace.json"))
         try:
             rec = run_arch_subprocess(arch, devices=devices,
-                                      timeout=spec.timeout)
+                                      timeout=spec.timeout,
+                                      extra_args=extra)
         except SubprocessError as e:
             rec = {"arch": arch, "ok": False, "skipped": False,
                    "violations": [f"subprocess failure: {e}"]}
@@ -131,13 +141,25 @@ def main(argv=None) -> int:
     ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
                     help="gate against a committed baseline; exit 1 on "
                          "regression")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write one validated Perfetto trace per arch "
+                         "(<DIR>/<arch>.trace.json) — the CI artifact "
+                         "upload source")
     args = ap.parse_args(argv)
+
+    # repro is importable here (run_matrix needs it), so use the
+    # metrics envelope directly; read_metrics unwraps enveloped docs
+    # and passes the legacy bare BASELINE json through unchanged.
+    from repro.obs.metrics import read_metrics, wrap_metrics
 
     archs = args.archs.split(",") if args.archs else None
     print(f"scenario matrix on a forced {args.devices}-device host mesh")
-    result = run_matrix(archs=archs, devices=args.devices)
+    result = run_matrix(archs=archs, devices=args.devices,
+                        trace_dir=args.trace_dir)
+    doc = wrap_metrics("bench_scenario_matrix", result,
+                       meta={"devices": args.devices})
     with open(args.out, "w") as f:
-        json.dump(result, f, indent=1, sort_keys=True)
+        json.dump(doc, f, indent=1, sort_keys=True)
     print(f"wrote {args.out}")
 
     bad = [a for a, r in result["records"].items()
@@ -146,8 +168,7 @@ def main(argv=None) -> int:
         print(f"FAILED archs: {', '.join(sorted(bad))}")
         return 1
     if args.check:
-        with open(args.check) as f:
-            baseline = json.load(f)
+        baseline = read_metrics(args.check)
         fails = check_against(result, baseline)
         if fails:
             print("regression gate FAILED:")

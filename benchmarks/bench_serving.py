@@ -24,7 +24,6 @@ Gate policy (docs/ARCHITECTURE.md):
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 from pathlib import Path
 
@@ -32,9 +31,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 try:                                    # package mode (benchmarks.run)
-    from .common import emit
+    from .common import emit, write_metrics
 except ImportError:                     # standalone script mode
-    from common import emit
+    from common import emit, write_metrics
 
 
 def _reference_outputs(cfg, params, workload, max_len: int) -> dict:
@@ -129,8 +128,8 @@ def run_serving(tiny: bool = False, out_path: str | None = None,
          f"c{levels[-1]} vs sequential: "
          f"{hi['speedup_vs_sequential']:.2f}x")
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(res, f, indent=1)
+        write_metrics(out_path, "bench_serving", res,
+                      meta={"arch": arch, "tiny": bool(tiny)})
         print(f"wrote {out_path}")
     return res
 

@@ -15,6 +15,7 @@ once, so multi-second partitioning phases don't get re-run five times.
 """
 from __future__ import annotations
 
+from repro.obs.metrics import read_metrics, wrap_metrics
 from repro.profiling.measure import MeasureSpec, measure_call
 
 #: Benchmark timing knobs: no warmup, median-of-5 for sub-second calls,
@@ -61,3 +62,29 @@ def timed(fn, *, spec: MeasureSpec = BENCH_SPEC) -> tuple:
                       "dispersion": m.dispersion, "noisy": m.noisy,
                       "samples": int(m.samples.size),
                       "attempts": int(m.attempts)}
+
+
+def write_metrics(path: str, source: str, payload: dict,
+                  meta: dict | None = None) -> dict:
+    """Write ``payload`` to ``path`` inside the versioned
+    ``repro-metrics`` envelope (see ``repro.obs.metrics``). Every
+    ``BENCH_*.json`` goes through here so CI can shape-validate the
+    whole artifact set with one command:
+
+        python -m repro.obs.metrics BENCH_*.json
+
+    Returns the full envelope document. Readers should use
+    :func:`read_metrics` (re-exported here), which unwraps the envelope
+    and passes legacy bare dicts through unchanged.
+    """
+    import json
+
+    doc = wrap_metrics(source, payload, meta=meta)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+__all__ = ["BENCH_SPEC", "small_paper_models", "emit", "timed",
+           "write_metrics", "read_metrics"]

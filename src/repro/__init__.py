@@ -19,7 +19,7 @@ _API = ("trace", "partition", "calibrate", "fold_device_map",
         "PlanValidationError", "PardnnOptions", "PLAN_SCHEMA_VERSION",
         "RUNTIMES")
 
-__all__ = list(_API) + ["api", "profiling", "serving"]
+__all__ = list(_API) + ["api", "obs", "profiling", "serving"]
 
 
 def __getattr__(name):
@@ -29,7 +29,7 @@ def __getattr__(name):
         import importlib
         api = importlib.import_module(".api", __name__)
         return api if name == "api" else getattr(api, name)
-    if name in ("profiling", "serving"):
+    if name in ("obs", "profiling", "serving"):
         import importlib
         return importlib.import_module("." + name, __name__)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -573,7 +573,8 @@ class PartitionPlan:
 
     def execute(self, *args, devices=None, device_map=None,
                 runtime: str | None = None, donate: bool = True,
-                mode: str | None = None, **kwargs):
+                mode: str | None = None, trace: str | None = None,
+                **kwargs):
         """Run the recorded program under this placement (the paper's
         "placement file → execution engine" path).
 
@@ -599,6 +600,15 @@ class PartitionPlan:
                 the same compiled segments and are bit-identical;
                 ``report.runtime["mode"]`` records which one produced
                 the timings.
+            trace: write a Chrome trace-event / Perfetto JSON file to
+                this path (open in ui.perfetto.dev). The call runs one
+                async :meth:`~repro.core.runtime.CompiledRuntime.
+                measure_timeline` pass and merges the **measured**
+                per-device segment lanes with the overlap emulator's
+                **predicted** lanes for the same segments
+                (``repro.obs.trace``) — prediction error per segment is
+                the offset between the two lane groups. Compiled
+                runtime only.
 
         A compiled execution caches its jitted segments on the plan
         (recompiles only when the devices change) and records its
@@ -619,6 +629,10 @@ class PartitionPlan:
                              f"have {list(RUNTIMES)}")
         devs = self._jax_devices(devices, device_map)
         if runtime == "interpret":
+            if trace is not None:
+                raise ValueError("trace= needs the compiled runtime's "
+                                 "measured timeline; drop "
+                                 "runtime='interpret'")
             return _execute(self.traced.program, self.assignment,
                             devs, *args, **kwargs)
         from .core.runtime import CompiledRuntime, resolve_runtime_mode
@@ -634,6 +648,12 @@ class PartitionPlan:
         # mode is resolved per call (not cached in the key): the same
         # compiled segments serve both dispatch modes
         rt[1].mode = resolve_runtime_mode(mode)
+        if trace is not None:
+            from .obs.trace import build_plan_trace
+            out, timeline = rt[1].measure_timeline(*args, **kwargs)
+            self.report.runtime = rt[1].stats.to_dict()
+            build_plan_trace(self, rt[1], timeline).save(trace)
+            return out
         out = rt[1](*args, **kwargs)
         self.report.runtime = rt[1].stats.to_dict()
         return out
@@ -834,7 +854,15 @@ class PartitionPlan:
                 drift = max(drift, float(np.max(np.abs(a - b))))
         predicted = [float(x) for x in self.peak_mem]
         measured = list(rt.get("peak_live_bytes", []))
+        # the full estimator evidence (median/MAD/dispersion/attempts/
+        # noisy per dispatch mode) rides in report.runtime so it
+        # serializes with the plan — a one-number speedup without its
+        # dispersion is not diagnosable from artifacts alone
+        timing_modes = {"async": m.to_dict(), "sync": m_sync.to_dict()}
+        self.report.runtime = {**self.report.runtime,
+                               "timing_modes": timing_modes}
         return {
+            "timing_modes": timing_modes,
             "interpreter_s": interp_s,
             "compiled_first_call_s": first_s,
             "compiled_s": best,
@@ -866,7 +894,8 @@ class PartitionPlan:
 
     # -- serving ------------------------------------------------------------
     def serve(self, cfg, params, *, devices=None, device_map=None,
-              runtime: str | None = None, **overrides):
+              runtime: str | None = None, trace: str | None = None,
+              **overrides):
         """Build a :class:`~repro.serving.ServingEngine` deploying this
         plan: the paged KV pools are allocated on the devices the plan
         assigns their consuming attention ops to, and every decode step
@@ -880,6 +909,10 @@ class PartitionPlan:
         changes the traced decode step's shapes, so overrides that
         alter it will fail the fingerprint check at bind time, which is
         the intended guardrail.
+
+        ``trace`` names a Chrome trace-event JSON path; the engine then
+        records the request lifecycle (queued→prefill→decode→done, with
+        evictions) and block-pool occupancy, written at drain time.
         """
         from .serving import ServingEngine
         geo = dict(self.meta.get("serving") or {})
@@ -891,7 +924,7 @@ class PartitionPlan:
                 "pass block_size/num_blocks/max_batch/max_len explicitly")
         return ServingEngine(cfg, params, plan=self, devices=devices,
                              device_map=device_map, runtime=runtime,
-                             **geo)
+                             trace=trace, **geo)
 
     # -- bridges ------------------------------------------------------------
     def to_pipeline_stages(self, layer_costs, layer_mem, act_bytes: float,

@@ -203,13 +203,19 @@ def _tree_close(a, b, rtol: float, atol: float) -> str | None:
     return None
 
 
-def run_conformance(spec: ArchSpec, save_dir: str | None = None) -> dict:
+def run_conformance(spec: ArchSpec, save_dir: str | None = None,
+                    trace_path: str | None = None) -> dict:
     """Drive ``spec.arch`` through the full loop on this process's
     devices; returns the conformance record (plain JSON types).
 
     Requires ``len(jax.devices()) >= spec.devices`` — run under a forced
     mesh (:func:`repro.conformance.run_arch_subprocess`) from test or
     benchmark processes whose device count is already locked at 1.
+
+    ``trace_path`` additionally runs one traced compiled execution
+    (``plan.execute(trace=...)``) and shape-validates the emitted
+    Perfetto document — an invalid trace, or one missing the measured /
+    predicted segment lanes, is a conformance violation.
     """
     import tempfile
 
@@ -329,6 +335,23 @@ def run_conformance(spec: ArchSpec, save_dir: str | None = None) -> dict:
             f"compiled runtime not deterministic across calls "
             f"(max abs diff {det:.3e})")
 
+    # --- traced execution: merged measured + predicted lanes ---------------
+    if trace_path is not None:
+        from repro.obs.trace import (predicted_vs_measured, load_trace,
+                                     validate_trace)
+        plan.execute(params, batch, runtime="compiled", trace=trace_path)
+        doc = load_trace(trace_path)
+        rec["trace_path"] = trace_path
+        rec["trace_events"] = len(doc.get("traceEvents", []))
+        for p in validate_trace(doc):
+            violations.append(f"trace: {p}")
+        pvm = predicted_vs_measured(doc)
+        rec["trace_segments_matched"] = len(pvm)
+        if not pvm:
+            violations.append(
+                "trace: no segment present in both the predicted and "
+                "measured lanes")
+
     # --- dispatch-mode equality: serialized == overlapped, exactly ---------
     # both modes run the same compiled executables on the same values in
     # the same order, so their outputs must be bit-identical — any drift
@@ -394,7 +417,8 @@ def run_conformance(spec: ArchSpec, save_dir: str | None = None) -> dict:
 # serving scenario
 # ---------------------------------------------------------------------------
 def run_serving_conformance(arch: str = "granite-8b", devices: int = 4,
-                            seed: int = 0) -> dict:
+                            seed: int = 0,
+                            trace_path: str | None = None) -> dict:
     """Serve a registered (dense) arch through ``plan.serve()`` on this
     process's forced mesh and assert the serving invariants:
 
@@ -460,8 +484,8 @@ def run_serving_conformance(arch: str = "granite-8b", devices: int = 4,
     rec["num_nodes"] = plan.n
     rec["feasible"] = bool(plan.feasible)
 
-    def serve_schedule(order):
-        eng = plan.serve(cfg, params)
+    def serve_schedule(order, trace=None):
+        eng = plan.serve(cfg, params, trace=trace)
         for i in order:
             eng.submit(Request(rid=i, prompt=prompts[i],
                                max_new_tokens=max_new))
@@ -469,7 +493,13 @@ def run_serving_conformance(arch: str = "granite-8b", devices: int = 4,
         return eng, done
 
     # (a) in-order admission, starved pool -> forced eviction/resume
-    eng_a, done_a = serve_schedule(range(n_req))
+    # (traced when requested: evictions land as instants on request lanes)
+    eng_a, done_a = serve_schedule(range(n_req), trace=trace_path)
+    if trace_path is not None:
+        from repro.obs.trace import validate_trace
+        rec["trace_path"] = trace_path
+        for p in validate_trace(trace_path):
+            violations.append(f"trace: {p}")
     sa = eng_a.stats
     rec["evictions"] = sa.preempted
     rec["leaked_blocks_evict"] = sa.leaked_blocks
@@ -530,11 +560,16 @@ def main(argv=None) -> int:
                     help="run the serving scenario (plan.serve token "
                          "equality + block accounting) instead of the "
                          "train-step loop")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto trace of the conformance "
+                         "execution (measured + predicted lanes; request "
+                         "lanes for --serving) and gate its validity")
     args = ap.parse_args(argv)
 
     from .subproc import JSON_MARK
     if args.serving:
-        rec = run_serving_conformance(arch=args.arch, devices=args.devices)
+        rec = run_serving_conformance(arch=args.arch, devices=args.devices,
+                                      trace_path=args.trace)
         print(JSON_MARK + json.dumps(rec))
         return 0
     overrides = {"devices": args.devices}
@@ -543,7 +578,7 @@ def main(argv=None) -> int:
         if v is not None:
             overrides[k] = v
     spec = spec_for(args.arch, **overrides)
-    rec = run_conformance(spec)
+    rec = run_conformance(spec, trace_path=args.trace)
     print(JSON_MARK + json.dumps(rec))
     return 0
 

@@ -52,6 +52,7 @@ import heapq
 
 import numpy as np
 
+from ..obs.spans import span as _span
 from .graph import CostGraph, ranges_index, scatter_max
 
 #: Default Step-2 engine when neither ``engine=`` nor the
@@ -96,9 +97,11 @@ class OverlapSchedule(Schedule):
 def emulate(g: CostGraph, assignment: np.ndarray, k: int,
             comm_scale: float = 1.0, engine: str | None = None) -> Schedule:
     """Emulate the FIFO executor; dispatches on ``engine``."""
-    if resolve_engine(engine) == "scalar":
-        return emulate_scalar(g, assignment, k, comm_scale)
-    return emulate_vectorized(g, assignment, k, comm_scale)
+    eng = resolve_engine(engine)
+    with _span("emulator/emulate"):
+        if eng == "scalar":
+            return emulate_scalar(g, assignment, k, comm_scale)
+        return emulate_vectorized(g, assignment, k, comm_scale)
 
 
 # --------------------------------------------------------------- vectorized
@@ -402,6 +405,14 @@ def emulate_overlap(g: CostGraph, assignment: np.ndarray, k: int,
     * ``makespan >= max(pe_busy)`` — each device serializes its compute;
     * with ``comm_scale == 0`` the result equals ``emulate(...)``.
     """
+    with _span("emulator/emulate_overlap"):
+        return _emulate_overlap(g, assignment, k, comm_scale,
+                                comm_streams)
+
+
+def _emulate_overlap(g: CostGraph, assignment: np.ndarray, k: int,
+                     comm_scale: float = 1.0,
+                     comm_streams: int = 1) -> OverlapSchedule:
     n = g.n
     streams = max(int(comm_streams), 1)
     if n == 0:

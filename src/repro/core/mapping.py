@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs.spans import traced as _traced
 from .fenwick import Fenwick, LevelIndex
 from .graph import CostGraph, ranges_index
 from .slicing import Slicing
@@ -114,6 +115,7 @@ def _comm_per_pe_scalar(g: CostGraph, assignment: np.ndarray,
     return out
 
 
+@_traced("partition/map_lalb")
 def map_clusters(g: CostGraph, s: Slicing) -> Mapping:
     n, k = g.n, s.k
     comp = np.asarray(g.comp)
@@ -226,6 +228,7 @@ def map_clusters(g: CostGraph, s: Slicing) -> Mapping:
                           "lalb_merged": len(remaining)})
 
 
+@_traced("partition/map_glb")
 def glb_map(g: CostGraph, s: Slicing) -> Mapping:
     """Baseline: Guided Load Balancing (Radulescu & van Gemund) —
     global (non-temporal) load balancing, communication ignored (§3.1.2's

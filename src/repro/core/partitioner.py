@@ -20,6 +20,7 @@ from typing import Callable
 
 import numpy as np
 
+from ..obs.spans import span as _span
 from .emulator import emulate
 from .graph import CostGraph, Placement
 from .mapping import map_clusters, glb_map
@@ -98,21 +99,25 @@ def pardnn_partition(g: CostGraph, k: int,
     opt = options or PardnnOptions()
     eng = opt.engine
     notify = progress if progress is not None else (lambda stage, info: None)
+    total_span = _span("partition/total", n=g.n, k=k).__enter__()
     t0 = time.perf_counter()
 
     # ---------------- Step-1 ----------------
-    s = slice_graph(g, k)
+    with _span("partition/slice", n=g.n, k=k):
+        s = slice_graph(g, k)
     t_slice = time.perf_counter()
     notify("slice", {"num_secondaries": len(s.secondaries),
                      "seconds": t_slice - t0})
 
-    m = map_clusters(g, s) if opt.lalb else glb_map(g, s)
+    with _span("partition/map", lalb=opt.lalb):
+        m = map_clusters(g, s) if opt.lalb else glb_map(g, s)
     t_map = time.perf_counter()
     notify("map", {**m.stats, "seconds": t_map - t_slice})
 
     assignment = m.assignment
     ref_stats: dict = {}
     if opt.refine:
+        refine_span = _span("partition/refine").__enter__()
         refined, swap_stats = refine_cluster_swaps(
             g, m, s.secondaries, k)
         # size-aware caps: each switch round recomputes levels (O(V+E));
@@ -134,6 +139,7 @@ def pardnn_partition(g: CostGraph, k: int,
             assignment = refined
         else:
             ref_stats["reverted"] = True
+        refine_span.__exit__(None, None, None)
     t_refine = time.perf_counter()
     if opt.refine:
         notify("refine", {**ref_stats, "seconds": t_refine - t_map})
@@ -149,12 +155,15 @@ def pardnn_partition(g: CostGraph, k: int,
                 else np.asarray(mem_caps, dtype=np.float64))
         caps = caps * opt.memory_fraction
         for _ in range(opt.max_memory_rounds):
+            round_span = _span("partition/step2_round",
+                               round=step2_rounds + 1).__enter__()
             sched = emulate(g, assignment, k, comm_scale=opt.comm_scale,
                             engine=eng)
             prof = compute_profile(g, assignment, sched, k, engine=eng)
             overflows = prof.first_overflow(caps)
             if not overflows:
                 feasible = True
+                round_span.__exit__(None, None, None)
                 break
             feasible = False
             step2_rounds += 1
@@ -181,6 +190,7 @@ def pardnn_partition(g: CostGraph, k: int,
             notify("step2_round", {"round": step2_rounds,
                                    "overflowing_pes": len(overflows),
                                    "moved_total": moved_total})
+            round_span.__exit__(None, None, None)
             if not progressed:
                 break  # ran out of movable nodes (§3.2.3 termination)
         else:
@@ -197,6 +207,7 @@ def pardnn_partition(g: CostGraph, k: int,
 
     notify("done", {"makespan": sched.makespan, "feasible": feasible,
                     "moved": moved_total, "seconds": t_end - t0})
+    total_span.__exit__(None, None, None)
     return Placement(
         assignment=assignment, k=k, makespan=sched.makespan,
         peak_mem=prof.peak, feasible=feasible, moved_nodes=moved_total,

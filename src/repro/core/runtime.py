@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.spans import get_tracer as _obs_tracer
 from .costmodel import DeviceModel
 from .errors import PlanValidationError
 from .executor import TracedProgram, validate_device_count
@@ -381,6 +382,11 @@ class CompiledRuntime:
         # it forces the serialized mode for attributable timings
         sync = self.mode == "sync" or self.profile_segments
         window = 0.0 if sync else float(self.transfer_window_bytes)
+        # telemetry: one flag read per call; every emit below is guarded
+        # so disabled tracing costs nothing on the dispatch hot path
+        obs = _obs_tracer()
+        obs_on = obs.enabled
+        obs_call_t0 = obs.now_us() if obs_on else 0.0
         t_start = time.perf_counter()
         k = len(self.devices)
         live = np.zeros(k, dtype=np.float64)
@@ -449,8 +455,15 @@ class CompiledRuntime:
                 nb = float(_nbytes(src_v))
                 if inflight + nb > window:
                     st.deferred_transfers += 1
+                    if obs_on:
+                        obs.instant("runtime/transfer_defer", "runtime",
+                                    {"bytes": nb, "device": dst_pe})
                     continue
                 v = jax.device_put(src_v, dev)
+                if obs_on:
+                    obs.instant("runtime/transfer_prefetch", "runtime",
+                                {"bytes": nb, "device": dst_pe,
+                                 "producer_seg": psid})
                 count_transfer(nb)
                 st.prefetched_transfers += 1
                 alloc(dst_pe, nb)
@@ -468,6 +481,7 @@ class CompiledRuntime:
         dispatch_s: list[float] = []
         retained: list[tuple[tuple, list]] = []
         for seg in sched.segments:
+            seg_t0 = obs.now_us() if obs_on else 0.0
             dev = self.devices[seg.device]
             transfer_pos = set(seg.transfer_inputs)
             donate_set = self._donate_sets[seg.sid]
@@ -511,6 +525,8 @@ class CompiledRuntime:
                 invals.append(v)
             exe = self._compiled.get(seg.sid)
             if exe is None:
+                if obs_on:
+                    compile_t0 = obs.now_us()
                 t0 = time.perf_counter()
                 with warnings.catch_warnings():
                     # CPU backends may decline donation; that is a
@@ -521,6 +537,11 @@ class CompiledRuntime:
                     exe = self._jits[seg.sid].lower(*invals).compile()
                 compile_s += time.perf_counter() - t0
                 self._compiled[seg.sid] = exe
+                if obs_on:
+                    obs.complete(f"runtime/compile/seg{seg.sid}",
+                                 compile_t0, obs.now_us() - compile_t0,
+                                 "runtime", {"segment": seg.sid,
+                                             "device": seg.device})
             t_seg = time.perf_counter() if self.profile_segments else 0.0
             with warnings.catch_warnings():
                 warnings.filterwarnings("ignore", message=".*donated.*",
@@ -536,6 +557,11 @@ class CompiledRuntime:
                 # outputs to the segment's device explicitly
                 outs = tuple(jax.device_put(o, dev) for o in outs)
             dispatch_s.append(time.perf_counter() - t_start - compile_s)
+            if obs_on:
+                obs.complete(f"runtime/dispatch/seg{seg.sid}", seg_t0,
+                             obs.now_us() - seg_t0, "runtime",
+                             {"segment": seg.sid, "device": seg.device,
+                              "nodes": len(seg.nodes)})
             for slot, v in zip(seg.outputs, outs):
                 env[slot] = v
                 alloc(seg.device, _nbytes(v))
@@ -607,6 +633,13 @@ class CompiledRuntime:
         self.stats.transfer_wait_seconds = xfer_wait_s
         self.stats.peak_live_bytes = [float(x) for x in peak]
         self.stats.resident_bytes = [float(x) for x in resident]
+        if obs_on:
+            obs.complete("runtime/call", obs_call_t0,
+                         obs.now_us() - obs_call_t0, "runtime",
+                         {"mode": st.mode, "segments": st.num_segments,
+                          "transfers": st.transfers,
+                          "prefetched": st.prefetched_transfers,
+                          "deferred": st.deferred_transfers})
         return result
 
 

@@ -257,7 +257,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
 
 def run_pardnn_plan(arch: str, devices: int, out_dir: str,
                     mem_cap_mb: float | None = None,
-                    execute: bool = False, lint: bool = False) -> dict:
+                    execute: bool = False, lint: bool = False,
+                    trace: str | None = None) -> dict:
     """Trace the arch's reduced train step and emit a versioned
     :class:`repro.api.PartitionPlan` artifact (JSON header + npz).
 
@@ -302,6 +303,11 @@ def run_pardnn_plan(arch: str, devices: int, out_dir: str,
     if execute:
         res["runtime"] = plan.benchmark_runtimes(params, reps=1)
         plan.meta["runtime"] = res["runtime"]
+        if trace:
+            # one traced execution on top of the benchmark: merged
+            # measured + predicted device lanes (see repro.obs.trace)
+            plan.execute(params, trace=trace)
+            res["trace_path"] = trace
     plan.save(path)
     return res
 
@@ -351,6 +357,22 @@ def cell_name(arch, shape, mesh_kind, tag=""):
     return f"{arch}__{shape}__{mesh_kind}{t}"
 
 
+def _arch_path(path: str | None, arch: str, multi: bool) -> str | None:
+    """Suffix the arch into ``path`` before the extension when one flag
+    value has to fan out over several archs."""
+    if path is None or not multi:
+        return path
+    root, ext = os.path.splitext(path)
+    return f"{root}.{arch}{ext or '.json'}"
+
+
+def _write_metrics(path: str, source: str, records: dict) -> None:
+    from repro.obs.metrics import wrap_metrics
+    with open(path, "w") as f:
+        json.dump(wrap_metrics(source, {"records": records}), f, indent=1)
+    print(f"wrote metrics {path}", flush=True)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -382,17 +404,27 @@ def main() -> int:
                          "report predicted-vs-measured stage MAPE")
     ap.add_argument("--calibrate-tiny", action="store_true",
                     help="cheap calibration settings (CI smoke)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --pardnn --pardnn-execute: write a "
+                         "Perfetto trace (measured + predicted lanes) of "
+                         "each plan's compiled execution; multi-arch runs "
+                         "suffix the arch before the extension")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the per-arch result records as one "
+                         "versioned repro-metrics envelope JSON")
     args = ap.parse_args()
 
     if args.calibrate:
         os.makedirs(args.out, exist_ok=True)
         archs = ASSIGNED_ARCHS if args.arch is None else [args.arch]
+        records = {}
         for a in archs:
             t0 = time.perf_counter()
             try:
                 res = run_calibration_cell(a, args.pardnn_devices,
                                            args.out,
                                            tiny=args.calibrate_tiny)
+                records[a] = res
                 path = os.path.join(args.out, f"{a}__calibration_report"
                                               f".json")
                 with open(path, "w") as f:
@@ -405,20 +437,29 @@ def main() -> int:
                       f" ms -> {res['profile']} "
                       f"({time.perf_counter() - t0:.1f}s)", flush=True)
             except Exception as e:
+                records[a] = {"arch": a,
+                              "error": f"{type(e).__name__}: {e}"}
                 print(f"[FAIL] {a}: {type(e).__name__}: {e}", flush=True)
+        if args.metrics:
+            _write_metrics(args.metrics, "dryrun_calibrate", records)
         return 0
 
     if args.pardnn:
         os.makedirs(args.out, exist_ok=True)
         archs = ASSIGNED_ARCHS if args.arch is None else [args.arch]
         failed = 0
+        records = {}
+        multi = len(archs) > 1
         for a in archs:
             t0 = time.perf_counter()
             try:
                 res = run_pardnn_plan(a, args.pardnn_devices, args.out,
                                       args.pardnn_mem_cap_mb,
                                       execute=args.pardnn_execute,
-                                      lint=args.lint)
+                                      lint=args.lint,
+                                      trace=_arch_path(args.trace, a,
+                                                       multi))
+                records[a] = res
                 dcounts = res["diagnostics"]["counts"]
                 print(f"[OK] {a}: {res['ops']} ops, makespan "
                       f"{res['makespan_s'] * 1e3:.3f} ms, "
@@ -455,8 +496,12 @@ def main() -> int:
             except Exception as e:
                 # includes PlanValidationError RP107: plan.save refuses
                 # to write a plan with error-severity diagnostics
+                records[a] = {"arch": a,
+                              "error": f"{type(e).__name__}: {e}"}
                 print(f"[FAIL] {a}: {type(e).__name__}: {e}", flush=True)
                 failed += 1
+        if args.metrics:
+            _write_metrics(args.metrics, "dryrun_pardnn", records)
         return 1 if failed else 0
 
     cells = []

@@ -32,6 +32,12 @@ def main():
     ap.add_argument("--fold", action="store_true",
                     help="alias plan PEs onto the available jax devices")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto trace of the serving run "
+                         "(request lanes + engine lane + pool counters)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the final ServingStats as a versioned "
+                         "repro-metrics envelope JSON")
     args = ap.parse_args()
 
     from repro.checkpoint.manager import CheckpointManager
@@ -58,10 +64,11 @@ def main():
         if args.fold:
             from repro.api import fold_device_map
             device_map = fold_device_map(plan.k)
-        eng = plan.serve(cfg, params, device_map=device_map)
+        eng = plan.serve(cfg, params, device_map=device_map,
+                         trace=args.trace)
         print(f"[serve] {plan.summary()}")
     else:
-        eng = ServingEngine(cfg, params, **geo)
+        eng = ServingEngine(cfg, params, trace=args.trace, **geo)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(3, 12))
@@ -75,6 +82,16 @@ def main():
     print(f"[serve] {len(done)} requests, {toks} tokens, {s.ticks} ticks, "
           f"{s.prefill_calls} prefill calls, {s.preempted} preemptions, "
           f"peak {s.peak_blocks_in_use}/{eng.allocator.capacity} blocks")
+    if args.trace:
+        print(f"[serve] wrote trace {args.trace}")
+    if args.metrics:
+        from repro.obs.metrics import MetricsRegistry
+        reg = MetricsRegistry("launch_serve",
+                              meta={"arch": args.arch,
+                                    "reduced": bool(args.reduced)})
+        reg.update(s.to_dict())
+        reg.save(args.metrics)
+        print(f"[serve] wrote metrics {args.metrics}")
 
 
 if __name__ == "__main__":

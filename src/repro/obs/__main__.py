@@ -1,0 +1,6 @@
+"""``python -m repro.obs FILE...`` — the metrics schema gate (avoids
+the runpy double-import warning of ``-m repro.obs.metrics``, which the
+package ``__init__`` already imports)."""
+from .metrics import main
+
+raise SystemExit(main())

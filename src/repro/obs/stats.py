@@ -1,0 +1,81 @@
+"""The one percentile/median/MAD module (see ``repro.obs``).
+
+Every dispersion number in the repo routes through here: the robust
+micro-timing estimator (``repro.profiling.measure`` imports
+:func:`median_mad` from this module), ``ServingStats`` TTFT /
+inter-token percentiles, the load generator's latency summaries, and
+``benchmarks/common.timed()``. Before this module each of those carried
+its own hand-rolled ``pct()`` — three subtly different interpolation
+behaviours for the same question.
+
+Conventions:
+
+* Percentile ranks are on the 0–100 scale (``p50`` = median) and use
+  linear interpolation (numpy's default), matching what the serving
+  benchmarks have always reported.
+* Empty inputs yield ``None`` rather than raising — latency lists are
+  legitimately empty before the first token lands, and summaries must
+  serialize regardless.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def percentile(xs: Sequence[float], q: float) -> float | None:
+    """Linear-interpolated percentile of ``xs`` (``q`` in 0..100);
+    ``None`` on empty input."""
+    xs = [x for x in xs if x is not None]
+    if not xs:
+        return None
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q))
+
+
+def median(xs: Sequence[float]) -> float | None:
+    return percentile(xs, 50.0)
+
+
+def median_mad(samples: Sequence[float]) -> tuple[float, float]:
+    """(median, median-absolute-deviation) of ``samples``.
+
+    The MAD half of every robust estimate in the repo — re-exported by
+    ``repro.profiling.measure`` so the estimator and the summaries can
+    never drift apart."""
+    s = np.asarray(samples, dtype=np.float64)
+    med = float(np.median(s))
+    return med, float(np.median(np.abs(s - med)))
+
+
+def dispersion(samples: Sequence[float]) -> float:
+    """MAD / median — the relative-noise score the measurement retry
+    loop thresholds on. 0.0 for empty or all-zero input."""
+    s = [x for x in samples if x is not None]
+    if not s:
+        return 0.0
+    med, mad = median_mad(s)
+    return mad / med if med > 0 else 0.0
+
+
+def latency_summary(xs: Sequence[float], prefix: str = "") -> dict:
+    """The standard latency block: p50/p99 plus the robust pair.
+
+    Keys are ``{prefix}p50_s``, ``{prefix}p99_s``, ``{prefix}median_s``,
+    ``{prefix}mad_s``, ``{prefix}n``; the three time-valued entries are
+    ``None`` when ``xs`` is empty so callers can serialize blindly.
+    """
+    xs = [x for x in xs if x is not None]
+    if not xs:
+        return {f"{prefix}p50_s": None, f"{prefix}p99_s": None,
+                f"{prefix}median_s": None, f"{prefix}mad_s": None,
+                f"{prefix}n": 0}
+    med, mad = median_mad(xs)
+    return {f"{prefix}p50_s": percentile(xs, 50.0),
+            f"{prefix}p99_s": percentile(xs, 99.0),
+            f"{prefix}median_s": med, f"{prefix}mad_s": mad,
+            f"{prefix}n": len(xs)}
+
+
+__all__ = ["percentile", "median", "median_mad", "dispersion",
+           "latency_summary"]

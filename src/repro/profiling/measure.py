@@ -32,9 +32,11 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 import numpy as np
+
+from repro.obs.stats import median_mad
 
 
 @dataclass(frozen=True)
@@ -81,13 +83,6 @@ class Measurement:
                 "samples": [float(x) for x in self.samples],
                 "kept": int(self.kept.size), "attempts": int(self.attempts),
                 "noisy": bool(self.noisy), "bimodal": bool(self.bimodal)}
-
-
-def median_mad(samples: Sequence[float]) -> tuple[float, float]:
-    """(median, median-absolute-deviation) of ``samples``."""
-    s = np.asarray(samples, dtype=np.float64)
-    med = float(np.median(s))
-    return med, float(np.median(np.abs(s - med)))
 
 
 def reject_outliers(samples: np.ndarray, outlier_mads: float

@@ -37,8 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill_batched
+from repro.obs.stats import latency_summary
 
 from . import kvcache
 from .kvcache import BlockAllocator
@@ -86,8 +88,9 @@ class ServingStats:
         self.preempted += req.evictions
 
     def to_dict(self) -> dict:
-        def pct(xs, q):
-            return float(np.percentile(xs, q)) if xs else None
+        # the latency blocks come from the shared dispersion module
+        # (repro.obs.stats): p50/p99 plus median/MAD/sample-count, so
+        # PlanReport.serving carries the full estimator evidence
         return {
             "submitted": self.submitted, "admitted": self.admitted,
             "preempted": self.preempted,
@@ -100,10 +103,8 @@ class ServingStats:
             "peak_active": self.peak_active,
             "peak_blocks_in_use": self.peak_blocks_in_use,
             "leaked_blocks": self.leaked_blocks,
-            "ttft_p50_s": pct(self.ttft_s, 50),
-            "ttft_p99_s": pct(self.ttft_s, 99),
-            "inter_token_p50_s": pct(self.inter_token_s, 50),
-            "inter_token_p99_s": pct(self.inter_token_s, 99),
+            **latency_summary(self.ttft_s, prefix="ttft_"),
+            **latency_summary(self.inter_token_s, prefix="inter_token_"),
         }
 
 
@@ -130,13 +131,19 @@ class ServingEngine:
         devices / device_map: forwarded to ``plan.execute`` (e.g.
             ``device_map`` to fold PEs onto fewer real devices).
         jit: jit the local step functions (ignored for the plan path).
+        trace: Chrome trace-event JSON path written at drain time — the
+            request lifecycle (queued+prefill / decode lanes per
+            request, eviction markers), admission batches, decode
+            steps, and block-pool occupancy counters
+            (``repro.obs.trace``; open in ui.perfetto.dev).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, block_size: int = 16,
                  num_blocks: int = 64, max_batch: int = 8,
                  max_len: int = 256, token_budget: int | None = None,
                  plan=None, devices=None, device_map=None,
-                 runtime: str | None = None, jit: bool = True):
+                 runtime: str | None = None, jit: bool = True,
+                 trace: str | None = None):
         if max_len % block_size:
             raise ValueError(f"max_len {max_len} must be a multiple of "
                              f"block_size {block_size}")
@@ -165,6 +172,13 @@ class ServingEngine:
         self.pools = kvcache.init_pools(cfg, num_blocks, self.block_size)
         self.stats = ServingStats()
         self.completed: dict[int, ServingRequest] = {}
+        # engine-local trace recording (independent of the global obs
+        # tracer): (kind, ts_s, dur_s, args) rows, exported at drain
+        self._trace_path = trace
+        self._trace_t0 = time.perf_counter()
+        self._trace_events: list[tuple] = []
+        if trace is not None:
+            self.scheduler.on_evict = self._record_evict
         self.plan = plan
         self._devices = devices
         self._device_map = device_map
@@ -246,6 +260,8 @@ class ServingEngine:
                 f"raise max_len")
         req.arrival_s = time.perf_counter()
         self.stats.submitted += 1
+        _obs.instant("serving/submit", "serving", rid=req.rid,
+                     prompt_tokens=plen)
         self.scheduler.submit(req)
 
     # ------------------------------------------------------------- steps
@@ -323,17 +339,50 @@ class ServingEngine:
                 self._finish(req)
         return len(batch)
 
+    def _record_evict(self, req: ServingRequest) -> None:
+        self._trace_events.append(
+            ("evict", time.perf_counter(), 0.0,
+             {"rid": req.rid, "evictions": req.evictions,
+              "generated": len(req.output)}))
+
     def tick(self) -> int:
         """One engine step: admit+prefill, then decode every active
         request by one token. Returns the number of requests advanced."""
         self.stats.ticks += 1
+        rec = self._trace_path is not None
         admits = self.scheduler.schedule_admissions()
         if admits:
-            self._run_prefill(admits)
-        advanced = self._run_decode() + len(admits)
+            t0 = time.perf_counter() if rec else 0.0
+            with _obs.span("serving/prefill_batch"):
+                self._run_prefill(admits)
+            if rec:
+                self._trace_events.append(
+                    ("prefill_batch", t0, time.perf_counter() - t0,
+                     {"admitted": len(admits),
+                      "tokens": int(sum(len(a.prompt) for a in admits)),
+                      "rids": [a.req.rid for a in admits]}))
+        t1 = time.perf_counter() if rec else 0.0
+        with _obs.span("serving/decode_step"):
+            decoded = self._run_decode()
+        if rec and decoded:
+            self._trace_events.append(
+                ("decode_step", t1, time.perf_counter() - t1,
+                 {"batch": decoded}))
+        advanced = decoded + len(admits)
         self.stats.peak_active = max(self.stats.peak_active,
                                      len(self.scheduler.active))
         self.stats.peak_blocks_in_use = self.allocator.peak_in_use
+        if rec:
+            self._trace_events.append(
+                ("counter", time.perf_counter(), 0.0,
+                 {"blocks_in_use": self.allocator.num_in_use,
+                  "active": len(self.scheduler.active),
+                  "waiting": len(self.scheduler.waiting)}))
+        if _obs.enabled():
+            _obs.counter("serving/pool", "serving",
+                         blocks_in_use=self.allocator.num_in_use,
+                         active=len(self.scheduler.active),
+                         waiting=len(self.scheduler.waiting))
         return advanced
 
     def run_until_drained(self, max_ticks: int = 100000
@@ -349,7 +398,56 @@ class ServingEngine:
         self.stats.leaked_blocks = self.allocator.num_in_use
         if self.plan is not None:
             self.plan.report.serving = self.stats.to_dict()
+        if self._trace_path is not None:
+            self.write_trace(self._trace_path)
         return self.completed
+
+    def write_trace(self, path: str) -> str:
+        """Export the recorded serving trace: one engine lane
+        (admission batches, decode steps, pool-occupancy counters) plus
+        one lane per completed request (queued+prefill span from
+        arrival to first token, decode span to the last token, eviction
+        markers)."""
+        from repro.obs.trace import SERVING_PID, TraceBuilder
+        b = TraceBuilder()
+        b.process(SERVING_PID, "serving")
+        b.thread(SERVING_PID, 0, "engine")
+        t0 = self._trace_t0
+
+        def us(t: float) -> float:
+            return (t - t0) * 1e6
+
+        for kind, ts, dur, args in self._trace_events:
+            if kind == "counter":
+                b.counter(SERVING_PID, 0, "pool", us(ts), args,
+                          cat="serving")
+            elif kind == "evict":
+                b.instant(SERVING_PID, 1 + int(args["rid"]), "evicted",
+                          us(ts), cat="serving", args=args)
+            else:
+                b.complete(SERVING_PID, 0, kind, us(ts), dur * 1e6,
+                           cat="serving", args=args)
+        for rid, req in sorted(self.completed.items()):
+            tid = 1 + rid
+            b.thread(SERVING_PID, tid, f"request {rid}")
+            if req.first_token_s is None:
+                continue
+            b.complete(SERVING_PID, tid, "queued+prefill",
+                       us(req.arrival_s),
+                       (req.first_token_s - req.arrival_s) * 1e6,
+                       cat="serving",
+                       args={"rid": rid, "prompt_tokens": len(req.prompt),
+                             "admissions": req.admissions})
+            if len(req.token_times) > 1:
+                b.complete(SERVING_PID, tid, "decode",
+                           us(req.first_token_s),
+                           (req.token_times[-1] - req.first_token_s) * 1e6,
+                           cat="serving",
+                           args={"rid": rid, "tokens": len(req.output),
+                                 "evictions": req.evictions})
+        if _obs.enabled():
+            b.add_spans()
+        return b.save(path)
 
 
 # ---------------------------------------------------------------------------

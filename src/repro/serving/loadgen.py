@@ -15,6 +15,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs.stats import percentile
+
 from .scheduler import ServingRequest
 
 
@@ -99,16 +101,15 @@ def summarize(engine, completed: dict, wall_s: float) -> dict:
     itl = [d for r in reqs for d in r.inter_token_s()]
     tokens = sum(len(r.output) for r in reqs)
 
-    def pct(xs, q):
-        return float(np.percentile(xs, q)) if xs else None
     return {
         "requests": len(reqs),
         "generated_tokens": tokens,
         "wall_s": float(wall_s),
         "tokens_per_s": tokens / wall_s if wall_s > 0 else None,
-        "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
-        "inter_token_p50_s": pct(itl, 50),
-        "inter_token_p99_s": pct(itl, 99),
+        "ttft_p50_s": percentile(ttft, 50),
+        "ttft_p99_s": percentile(ttft, 99),
+        "inter_token_p50_s": percentile(itl, 50),
+        "inter_token_p99_s": percentile(itl, 99),
         "preempted": engine.stats.preempted,
         "peak_blocks_in_use": engine.allocator.peak_in_use,
         "leaked_blocks": engine.allocator.num_in_use,

@@ -35,6 +35,8 @@ from typing import Callable
 
 import numpy as np
 
+from repro.obs.spans import instant as _obs_instant
+
 from .kvcache import BlockAllocator, OutOfBlocks
 
 
@@ -137,6 +139,9 @@ class Scheduler:
         self.waiting: deque[ServingRequest] = deque()
         self.active: list[ServingRequest] = []   # PREFILL/DECODE
         self._admit_counter = itertools.count()
+        # optional eviction observer (the engine's trace recorder);
+        # called with the victim right after it is re-queued
+        self.on_evict: Callable[[ServingRequest], None] | None = None
 
     # -- queue ----------------------------------------------------------
     def submit(self, req: ServingRequest) -> None:
@@ -219,6 +224,11 @@ class Scheduler:
         victim.length = 0
         self.active.remove(victim)
         self._requeue_front(victim)
+        _obs_instant("serving/evict", "serving", rid=victim.rid,
+                     evictions=victim.evictions,
+                     generated=len(victim.output))
+        if self.on_evict is not None:
+            self.on_evict(victim)
         return victim
 
     # -- completion ------------------------------------------------------
